@@ -1,0 +1,81 @@
+"""Shared benchmark harness: tiny-scale training comparisons + layer timers.
+
+Full-scale perplexity reproduction needs 100k GPU-steps; this container is a single
+CPU core. The benchmarks therefore (a) reproduce each paper table's COMPARISON at
+reduced scale (same architectures, same parameter-matching discipline, same
+ablations, synthetic data, few hundred steps) and (b) measure wall-clock/bytes of
+the layer implementations. Table-level CSV: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, moe_ffn
+from repro.configs.base import AttentionConfig, FFNConfig, ModelConfig, OptimizerConfig
+from repro.data import DataIterator, make_dataset
+from repro.models import build_model
+from repro.runtime.steps import init_train_state, make_train_step
+
+VOCAB = 256
+
+
+def tiny_lm(ffn: FFNConfig, d_model: int = 64, n_layers: int = 2,
+            vocab: int = VOCAB) -> ModelConfig:
+    return ModelConfig(
+        name="bench", family="dense", n_layers=n_layers, d_model=d_model,
+        vocab_size=vocab, norm="layernorm", pos_encoding="rope",
+        attention=AttentionConfig(n_heads=4, n_kv_heads=4, head_dim=16,
+                                  kv_chunk=64),
+        ffn=ffn, tie_embeddings=True)
+
+
+def train_variant(name: str, cfg: ModelConfig, *, steps: int = 120,
+                  batch: int = 8, seq: int = 64, lr: float = 3e-3,
+                  seed: int = 0) -> Dict[str, float]:
+    """Train on the deterministic synthetic stream; return loss + timing stats."""
+    model = build_model(cfg)
+    opt = OptimizerConfig(lr=lr, total_steps=steps, grad_clip=0.25)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    state = init_train_state(model, jax.random.PRNGKey(seed), opt)
+    it = DataIterator(make_dataset("synthetic", cfg.vocab_size), batch, seq + 1,
+                      seed=seed)
+    rng = jax.random.PRNGKey(seed + 1)
+    losses = []
+    t0 = None
+    for s in range(steps):
+        b = {"tokens": jnp.asarray(it.next()["tokens"])}
+        state, m = step_fn(state, b, rng)
+        losses.append(float(m["loss"]))
+        if s == 4:                       # skip compile in timing
+            t0 = time.perf_counter()
+    dt = (time.perf_counter() - t0) / max(steps - 5, 1)
+    tail = float(np.mean(losses[-10:]))
+    pc = cfg.param_counts()
+    _, active = cfg.ffn_params()
+    total_ffn, _ = cfg.ffn_params()
+    return {
+        "name": name, "final_loss": tail, "first_loss": losses[0],
+        "us_per_step": dt * 1e6, "params": pc["total"],
+        "ffn_flops_pct": 100.0 * active / max(total_ffn, 1),
+    }
+
+
+def time_layer(apply_fn, params, x, *, iters: int = 20) -> float:
+    """us per fwd+bwd call of a single layer."""
+    f = jax.jit(jax.grad(lambda p, x: apply_fn(p, x)[0].astype(jnp.float32).sum()))
+    g = f(params, x)
+    jax.block_until_ready(g)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        g = f(params, x)
+    jax.block_until_ready(g)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

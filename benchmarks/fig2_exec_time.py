@@ -1,0 +1,56 @@
+"""Paper Fig. 2/8-11: execution time + memory of a single MLP vs MoE layer as
+d_model grows (K=4, G=128, d_ff=4*d_model, N_E=d_ff/G), fwd+bwd.
+
+The paper measures its Triton kernel on an RTX 3090; here we measure the JAX layer
+(CVMM sort path on CPU + the einsum path) -- the comparison of interest is the
+RELATIVE cost MoE/dense and its scaling in d_model, plus parameter bytes touched.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import moe_ffn
+from repro.configs.base import FFNConfig
+from repro.core import apply_dense, apply_moe, init_dense, init_moe
+
+from .common import csv_row, time_layer
+
+TOKENS = 2048          # |B| scaled down from the paper's 32768 for CPU
+
+
+def run():
+    rows = []
+    for d_model in (128, 256, 512):
+        d_ff = 4 * d_model
+        g = 128
+        ne = d_ff // g
+        k = min(4, ne)
+        x = jax.random.normal(jax.random.PRNGKey(0), (TOKENS, d_model),
+                              jnp.float32)
+
+        dcfg = FFNConfig(kind="dense", d_ff=d_ff, activation="relu")
+        dp = init_dense(jax.random.PRNGKey(1), d_model, dcfg, 1)
+        us_d = time_layer(lambda p, x: apply_dense(p, x, dcfg), dp, x, iters=5)
+        bytes_d = 2 * d_model * d_ff * 4
+        rows.append(csv_row(f"fig2/dense_d{d_model}", us_d,
+                            f"param_bytes={bytes_d}"))
+
+        mcfg = moe_ffn(ne, g, k, dispatch="sort")
+        mp = init_moe(jax.random.PRNGKey(1), d_model, mcfg, 1)
+        us_m = time_layer(lambda p, x: apply_moe(p, x, mcfg), mp, x, iters=5)
+        active_bytes = int(bytes_d * k / ne)
+        rows.append(csv_row(
+            f"fig2/moe_sort_d{d_model}", us_m,
+            f"active_param_bytes={active_bytes};ratio_vs_dense={us_m/us_d:.2f}"))
+
+        ecfg = dataclasses.replace(mcfg, dispatch="einsum")
+        us_e = time_layer(lambda p, x: apply_moe(p, x, ecfg), mp, x, iters=5)
+        rows.append(csv_row(
+            f"fig2/moe_einsum_d{d_model}", us_e,
+            f"active_param_bytes={active_bytes};ratio_vs_dense={us_e/us_d:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

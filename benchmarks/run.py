@@ -1,0 +1,47 @@
+"""Benchmark aggregator -- one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--steps N] [--only tableX]
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (fig1_active_channels, fig2_exec_time, fig3_expert_usage,
+                   table1_topk, table2_pkm, table3_sigma_moe, table4_ablations)
+    mods = {
+        "table1": lambda: table1_topk.run(args.steps),
+        "table2": lambda: table2_pkm.run(args.steps),
+        "table3": lambda: table3_sigma_moe.run(max(args.steps, 150)),
+        "table4": lambda: table4_ablations.run(max(args.steps - 20, 60)),
+        "fig1": lambda: fig1_active_channels.run(args.steps),
+        "fig2": lambda: fig2_exec_time.run(),
+        "fig3": lambda: fig3_expert_usage.run(args.steps),
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in mods.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # report and continue
+            failures += 1
+            print(f"{name},nan,ERROR={type(e).__name__}:{e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Table 1: Top-K activation vs dense, K sweep. Reduced-scale reproduction:
+the paper finds top-K preserves (even slightly improves) loss down to K ~ d_ff/16."""
+from repro.configs.base import FFNConfig
+
+from .common import csv_row, tiny_lm, train_variant
+
+D_FF = 256
+
+
+def run(steps: int = 120):
+    rows = []
+    variants = [("dense", FFNConfig(kind="dense", d_ff=D_FF, activation="relu"))]
+    for k in (16, 32, 64, 128):
+        variants.append((f"topk_k{k}", FFNConfig(kind="topk", d_ff=D_FF,
+                                                 topk_k=k, activation="relu")))
+    for name, ffn in variants:
+        r = train_variant(f"table1/{name}", tiny_lm(ffn), steps=steps)
+        rows.append(csv_row(r["name"], r["us_per_step"],
+                            f"final_loss={r['final_loss']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,32 @@
+"""Paper Table 2/6: PKM softmax vs ReLU vs dense (parameter-matched).
+
+Paper claim: ReLU (non-competitive) PKM clearly beats softmax PKM; both trail dense.
+"""
+from repro.configs.base import FFNConfig
+
+from .common import csv_row, tiny_lm, train_variant
+
+
+def run(steps: int = 120):
+    # dense d_ff=256 -> params 2*64*256 = 32k. PKM: values ns^2*64 + keys; ns=18
+    # gives 324 values ~ 20.7k + keys 2*2*18*32 = 2.3k; parameter-matched-ish.
+    rows = []
+    variants = [
+        ("dense", FFNConfig(kind="dense", d_ff=256, activation="relu")),
+        ("pkm_softmax", FFNConfig(kind="pkm", n_subkeys=18, pkm_heads=2,
+                                  pkm_knn=8, activation="softmax")),
+        ("pkm_relu", FFNConfig(kind="pkm", n_subkeys=18, pkm_heads=2,
+                               pkm_knn=8, activation="relu")),
+        ("pkm_relu_init", FFNConfig(kind="pkm", n_subkeys=18, pkm_heads=2,
+                                    pkm_knn=8, activation="relu",
+                                    sigma_moe_init=True)),
+    ]
+    for name, ffn in variants:
+        r = train_variant(f"table2/{name}", tiny_lm(ffn), steps=steps)
+        rows.append(csv_row(r["name"], r["us_per_step"],
+                            f"final_loss={r['final_loss']:.4f};params={r['params']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,45 @@
+"""Paper Table 4/10: MoE design ablations -- selector activation, init,
+regularization, expert dropout, (G, K) trade-off, Switch/S-BASE baselines."""
+import dataclasses
+
+from repro.configs import moe_ffn
+
+from .common import csv_row, tiny_lm, train_variant
+
+NE, G, K = 8, 32, 2
+
+
+def variants():
+    base = moe_ffn(NE, G, K, reg_gamma=1e-3, reg_kind="entropy", dispatch="sort",
+                   expert_dropout=0.05)
+    yield "sigma_moe", base
+    yield "standard_dropout", dataclasses.replace(base, expert_dropout=0.0)
+    yield "softmax_after_topk", dataclasses.replace(
+        base, selector_activation="softmax", renormalize=False)
+    yield "softmax_renorm", dataclasses.replace(
+        base, selector_activation="softmax", renormalize=True)
+    yield "standard_init", dataclasses.replace(base, sigma_moe_init=False)
+    yield "no_reg", dataclasses.replace(base, reg_gamma=0.0, expert_dropout=0.0)
+    yield "k4_g16", moe_ffn(16, 16, 4, reg_gamma=1e-3, dispatch="sort")
+    yield "k1_g64", moe_ffn(4, 64, 1, reg_gamma=1e-3, dispatch="sort")
+    yield "switch_k1_g64", dataclasses.replace(
+        moe_ffn(4, 64, 1, reg_kind="switch", reg_gamma=1e-2, dispatch="einsum"),
+        kind="switch", selector_activation="softmax")
+    yield "sbase_k2_g32", dataclasses.replace(
+        moe_ffn(NE, G, K, reg_gamma=1e-3, dispatch="sort"), kind="sbase")
+    yield "noisy_topk", dataclasses.replace(
+        moe_ffn(NE, G, K, reg_kind="cv", reg_gamma=1e-2, dispatch="sort"),
+        kind="noisy_topk", selector_activation="softmax", renormalize=True)
+
+
+def run(steps: int = 100):
+    rows = []
+    for name, ffn in variants():
+        r = train_variant(f"table4/{name}", tiny_lm(ffn), steps=steps)
+        rows.append(csv_row(r["name"], r["us_per_step"],
+                            f"final_loss={r['final_loss']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

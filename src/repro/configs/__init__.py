@@ -1,0 +1,10 @@
+from .base import (AttentionConfig, BlockSpecEntry, FFNConfig, MeshConfig, ModelConfig,
+                   OptimizerConfig, SHAPES, ShapeConfig, SSMConfig, TrainConfig,
+                   moe_ffn)
+from .archs import ASSIGNED_ARCHS, get_config, list_archs, reduced
+
+__all__ = [
+    "AttentionConfig", "BlockSpecEntry", "FFNConfig", "MeshConfig", "ModelConfig",
+    "OptimizerConfig", "SHAPES", "ShapeConfig", "SSMConfig", "TrainConfig", "moe_ffn",
+    "ASSIGNED_ARCHS", "get_config", "list_archs", "reduced",
+]

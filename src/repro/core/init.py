@@ -1,0 +1,44 @@
+"""Initialization schemes (paper Sec. 5, 'sigma-MoE Initialization').
+
+The paper's insight: experts approximate a *single* dense MLP, so they must be
+initialized exactly like the pre-layernorm dense baseline --
+
+    W1 ~ N(0, sqrt(2 / (d_model * n_layers)))
+    W2 ~ N(0, sqrt(2 / (d_ff    * n_layers)))
+
+using the FULL d_ff (= G * N_E), *not* the per-expert group size G. The selector W3 is
+drawn N(0,1), row-normalized to unit norm, then rescaled to W1's std so that only the
+ANGLE between x and selector rows affects initial scores (footnote 5).
+
+'standard init' (the ablation baseline) uses per-expert fan-in: W2 ~ N(0, sqrt(2/G)).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_std_in(d_model: int, n_layers: int) -> float:
+    return math.sqrt(2.0 / (d_model * max(n_layers, 1)))
+
+
+def dense_std_out(d_ff: int, n_layers: int) -> float:
+    return math.sqrt(2.0 / (d_ff * max(n_layers, 1)))
+
+
+def normal(key, shape, std, dtype=jnp.float32):
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def row_normalized(key, shape, std, dtype=jnp.float32):
+    """N(0,1) -> rows rescaled to unit norm -> whole matrix rescaled to `std`.
+
+    shape: (..., rows, cols); normalization is over the last axis.
+    """
+    w = jax.random.normal(key, shape, dtype)
+    w = w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-9)
+    # After row normalization each entry has std ~ 1/sqrt(cols); rescale so the
+    # elementwise std matches `std` (same as W1's rows).
+    return w * (std * math.sqrt(shape[-1]))

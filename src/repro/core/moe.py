@@ -1,0 +1,315 @@
+"""sigma-MoE and baseline MoE variants (paper Sec. 3.3-5) with three dispatch paths.
+
+Dispatch paths
+--------------
+"sort"      The paper-faithful, *dropless* path: tokens are argsorted by expert id and
+            multiplied by their expert's matrices via a grouped matmul -- the TPU
+            adaptation of the paper's CVMM CUDA kernel (kernels/cvmm.py). No capacity,
+            no token drops, exactly Eq. 11. Experts live wherever the weights are
+            sharded (replicated / FSDP); no all-to-all.
+
+"einsum"    GShard-style capacity-based dense dispatch under plain pjit: scatter tokens
+            into an (E, C, d) buffer, einsum against expert weights; GSPMD inserts the
+            collectives when experts are sharded over the 'model' axis. Robust baseline
+            for the multi-pod dry-run.
+
+"shard_map" Explicit expert parallelism: per-data-shard routing + capacity packing,
+            one all_to_all along 'model' to move token buffers to their expert shards,
+            local expert FFN, inverse all_to_all back. The production EP path.
+
+All paths share the routing math (routing.py), regularizers (regularizers.py) and the
+paper's initialization (init.py), so ablations isolate exactly one design choice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..common import act_fn, cdiv, round_up
+from ..configs.base import FFNConfig
+from ..sharding.context import current_mesh
+from . import init as initlib
+from .regularizers import REGULARIZERS, usage_stats
+from .routing import SelectionInfo, select_experts, select_experts_sbase
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def n_experts_padded(cfg: FFNConfig, ep_degree: int = 0) -> int:
+    if ep_degree and cfg.n_experts % ep_degree:
+        return round_up(cfg.n_experts, ep_degree)
+    return cfg.n_experts
+
+
+def init_moe(key, d_model: int, cfg: FFNConfig, n_layers: int,
+             dtype=jnp.float32, ep_degree: int = 0) -> Dict:
+    """Expert + selector parameters.
+
+    sigma_moe_init=True (paper Sec. 5): W1/W2 stds use d_model/d_ff (the DENSE
+    equivalent), W3 row-normalized at W1's std. False: 'standard init' ablation,
+    std from per-expert fan-in G.
+    """
+    e = n_experts_padded(cfg, ep_degree)
+    g = cfg.expert_size
+    d_ff = cfg.n_experts * g
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    if cfg.sigma_moe_init:
+        s1 = initlib.dense_std_in(d_model, n_layers)
+        s2 = initlib.dense_std_out(d_ff, n_layers)
+    else:
+        s1 = (d_model) ** -0.5
+        s2 = (0.1 / g) ** 0.5          # Switch Transformer's sqrt(0.1/G)
+    p = {
+        "we1": initlib.normal(k1, (e, d_model, g), s1, dtype),
+        "we2": initlib.normal(k2, (e, g, d_model), s2, dtype),
+        "router": initlib.row_normalized(k3, (cfg.n_experts, d_model), s1, dtype).T
+              if cfg.sigma_moe_init else
+              initlib.normal(k3, (d_model, cfg.n_experts), s1, dtype),
+    }
+    if cfg.glu_experts:
+        p["we1g"] = initlib.normal(k4, (e, d_model, g), s1, dtype)
+    if cfg.kind == "noisy_topk":
+        p["router_noise"] = initlib.normal(k5, (d_model, cfg.n_experts), s1, dtype)
+    if cfg.n_shared_experts:
+        ks1, ks2, ks3 = jax.random.split(k6, 3)
+        se = cfg.n_shared_experts
+        p["shared_w1"] = initlib.normal(ks1, (se, d_model, g), s1, dtype)
+        p["shared_w2"] = initlib.normal(ks2, (se, g, d_model), s2, dtype)
+        if cfg.glu_experts:
+            p["shared_w1g"] = initlib.normal(ks3, (se, d_model, g), s1, dtype)
+    return p
+
+
+def _expert_ffn(cfg: FFNConfig, h_pre, h_gate):
+    act = act_fn(cfg.activation if cfg.kind != "sigma_moe" else cfg.activation)
+    u = act(h_pre)
+    if cfg.glu_experts:
+        u = u * h_gate
+    return u
+
+
+# ---------------------------------------------------------------------------
+# Routing front-end (shared)
+# ---------------------------------------------------------------------------
+
+def _route(params: Dict, xf: jax.Array, cfg: FFNConfig, rng, train: bool,
+           e_pad: int) -> SelectionInfo:
+    logits = jnp.einsum("nd,de->ne", xf, params["router"].astype(xf.dtype))
+    if e_pad > cfg.n_experts:
+        pad = jnp.full((xf.shape[0], e_pad - cfg.n_experts), -1e9, logits.dtype)
+        logits = jnp.concatenate([logits, pad], axis=-1)
+    if cfg.kind == "sbase":
+        return select_experts_sbase(logits, cfg, train=train,
+                                    n_valid_experts=cfg.n_experts)
+    noise_logits = None
+    if cfg.kind == "noisy_topk":
+        noise_logits = jnp.einsum("nd,de->ne", xf, params["router_noise"].astype(xf.dtype))
+        if e_pad > cfg.n_experts:
+            noise_logits = jnp.pad(noise_logits,
+                                   ((0, 0), (0, e_pad - cfg.n_experts)))
+    return select_experts(logits, cfg, rng=rng, train=train,
+                          noise_logits=noise_logits, n_valid_experts=cfg.n_experts)
+
+
+# ---------------------------------------------------------------------------
+# Path 1: sort / CVMM (paper-faithful, dropless)
+# ---------------------------------------------------------------------------
+
+def _apply_sort(params: Dict, xf: jax.Array, cfg: FFNConfig, info: SelectionInfo,
+                e: int) -> jax.Array:
+    """Dropless grouped matmul: the TPU CVMM path.
+
+    1. flatten (token, k) pairs; 2. stable-argsort by expert id (the paper's CUDA
+    kernel does exactly this reordering); 3. grouped matmul where row-groups share an
+    expert matrix; 4. scatter-add results back per token, weighted by the gates.
+    """
+    from ..kernels import ops as kops  # local import: kernels are optional at import
+
+    n, d = xf.shape
+    k = cfg.k
+    e_flat = info.idx.reshape(-1)                         # (N*K,)
+    g_flat = info.gates.reshape(-1)
+    tok = jnp.repeat(jnp.arange(n), k)
+
+    perm = jnp.argsort(e_flat, stable=True)               # CVMM preprocessing sort
+    e_sorted = e_flat[perm]
+    x_sorted = xf[tok[perm]]                              # (N*K, d) gathered rows
+    group_sizes = jnp.bincount(e_sorted, length=e)        # (E,)
+
+    h = kops.cvmm(x_sorted, group_sizes, params["we1"].astype(xf.dtype))
+    if cfg.glu_experts:
+        hg = kops.cvmm(x_sorted, group_sizes, params["we1g"].astype(xf.dtype))
+    else:
+        hg = None
+    u = _expert_ffn(cfg, h, hg)
+    y_sorted = kops.cvmm(u, group_sizes, params["we2"].astype(xf.dtype))
+    y_sorted = y_sorted * g_flat[perm][:, None].astype(y_sorted.dtype)
+
+    out = jnp.zeros_like(xf)
+    out = out.at[tok[perm]].add(y_sorted)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Path 2: einsum (GShard capacity dispatch, pure pjit)
+# ---------------------------------------------------------------------------
+
+def _capacity(n_tokens: int, k: int, e: int, factor: float, multiple: int = 8) -> int:
+    return max(multiple, round_up(int(cdiv(n_tokens * k, e) * factor), multiple))
+
+
+def _pack_capacity(xf, info: SelectionInfo, e: int, cap: int):
+    """Scatter tokens into an (E, C, d) buffer. Returns buffer + combine metadata."""
+    n, d = xf.shape
+    k = info.idx.shape[-1]
+    e_flat = info.idx.reshape(-1)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)       # (NK, E)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1   # rank in expert
+    keep = pos < cap
+    tok = jnp.repeat(jnp.arange(n), k)
+    e_safe = jnp.where(keep, e_flat, 0)
+    p_safe = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((e, cap, d), xf.dtype)
+    buf = buf.at[e_safe, p_safe].add(xf[tok] * keep[:, None].astype(xf.dtype),
+                                     mode="drop")
+    return buf, (tok, e_safe, p_safe, keep)
+
+
+def _combine_capacity(buf_out, info: SelectionInfo, meta, n: int) -> jax.Array:
+    tok, e_safe, p_safe, keep = meta
+    g_flat = info.gates.reshape(-1)
+    rows = buf_out[e_safe, p_safe]                            # (NK, d)
+    rows = rows * (g_flat * keep.astype(g_flat.dtype))[:, None].astype(rows.dtype)
+    out = jnp.zeros((n, buf_out.shape[-1]), buf_out.dtype)
+    return out.at[tok].add(rows, mode="drop")
+
+
+def _apply_einsum(params: Dict, xf: jax.Array, cfg: FFNConfig, info: SelectionInfo,
+                  e: int) -> Tuple[jax.Array, jax.Array]:
+    n, d = xf.shape
+    cap = _capacity(n, cfg.k, e, cfg.capacity_factor)
+    buf, meta = _pack_capacity(xf, info, e, cap)
+    # Constrain the buffer to expert-sharding so GSPMD materializes the dispatch
+    # collective here rather than all-gathering the expert weights.
+    if current_mesh() is not None:
+        buf = jax.lax.with_sharding_constraint(
+            buf, jax.sharding.NamedSharding(current_mesh(), P("model", None, None)))
+    h = jnp.einsum("ecd,edg->ecg", buf, params["we1"].astype(xf.dtype))
+    hg = (jnp.einsum("ecd,edg->ecg", buf, params["we1g"].astype(xf.dtype))
+          if cfg.glu_experts else None)
+    u = _expert_ffn(cfg, h, hg)
+    buf_out = jnp.einsum("ecg,egd->ecd", u, params["we2"].astype(xf.dtype))
+    if current_mesh() is not None:
+        buf_out = jax.lax.with_sharding_constraint(
+            buf_out, jax.sharding.NamedSharding(current_mesh(), P("model", None, None)))
+    y = _combine_capacity(buf_out, info, meta, n)
+    dropped = 1.0 - jnp.mean(meta[3].astype(jnp.float32))
+    return y, dropped
+
+
+# ---------------------------------------------------------------------------
+# Path 3: shard_map (explicit all_to_all expert parallelism)
+# ---------------------------------------------------------------------------
+
+def _apply_shard_map(params: Dict, xf: jax.Array, cfg: FFNConfig,
+                     info: SelectionInfo, e: int) -> Tuple[jax.Array, jax.Array]:
+    """Explicit EP (GShard pattern): tokens sharded over EVERY mesh axis; expert
+    weights sharded over 'model'.
+
+    Per device: pack its token block into an (E, C, d) capacity buffer, one
+    all_to_all along 'model' (split experts, concat capacity) -> (E/mp, C*mp, d),
+    local FFN with the resident expert shard, inverse all_to_all, local combine.
+    Exactly 2 all_to_alls per MoE layer -- the collective-minimal dispatch that the
+    einsum/GSPMD path only approximates (see EXPERIMENTS.md SPerf).
+    """
+    mesh = current_mesh()
+    n, d = xf.shape
+    if mesh is None or "model" not in mesh.axis_names:
+        return _apply_einsum(params, xf, cfg, info, e)
+    mp = mesh.shape["model"]
+    all_axes = tuple(mesh.axis_names)
+    n_shards = 1
+    for a in all_axes:
+        n_shards *= mesh.shape[a]
+    if n % n_shards or e % mp or (n // n_shards) == 0:
+        # token count or expert count not tileable (tiny decode batches):
+        # fall back to the einsum path.
+        return _apply_einsum(params, xf, cfg, info, e)
+
+    cap = _capacity(n // n_shards, cfg.k, e, cfg.capacity_factor)
+
+    def local(xl, idxl, gatesl, w1, w1g, w2):
+        # xl: (n_local, d); w1: (E/mp, d, g)
+        infol = SelectionInfo(probs=jnp.zeros((xl.shape[0], e), xl.dtype),
+                              sel=jnp.zeros((xl.shape[0], e), xl.dtype),
+                              idx=idxl, gates=gatesl)
+        buf, meta = _pack_capacity(xl, infol, e, cap)          # (E, C, d)
+        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                                 tiled=True)                   # (E/mp, C*mp, d)
+        h = jnp.einsum("ecd,edg->ecg", buf, w1)
+        hg = jnp.einsum("ecd,edg->ecg", buf, w1g) if w1g is not None else None
+        u = _expert_ffn(cfg, h, hg)
+        out = jnp.einsum("ecg,egd->ecd", u, w2)                # (E/mp, C*mp, d)
+        out = jax.lax.all_to_all(out, "model", split_axis=1, concat_axis=0,
+                                 tiled=True)                   # (E, C, d)
+        y = _combine_capacity(out, infol, meta, xl.shape[0])
+        dropped = 1.0 - jnp.mean(meta[3].astype(jnp.float32))
+        return y, jax.lax.pmean(dropped, all_axes)
+
+    tok_spec = P(all_axes, None)
+    w_spec = P("model", None, None)
+    w1 = params["we1"].astype(xf.dtype)
+    w2 = params["we2"].astype(xf.dtype)
+    w1g = (params["we1g"].astype(xf.dtype) if cfg.glu_experts
+           else jnp.zeros((e, 1, 1), xf.dtype))
+    y, dropped = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(tok_spec, tok_spec, tok_spec, w_spec, w_spec, w_spec),
+        out_specs=(tok_spec, P()),
+    )(xf, info.idx, info.gates, w1, w1g, w2)
+    return y, dropped
+
+
+# ---------------------------------------------------------------------------
+# Public apply
+# ---------------------------------------------------------------------------
+
+def apply_moe(params: Dict, x: jax.Array, cfg: FFNConfig, *,
+              rng: Optional[jax.Array] = None, train: bool = False,
+              collect_stats: bool = False) -> Tuple[jax.Array, Dict]:
+    """y_hat = sum_{e in E_x} W2^e s[e] act(W1^e x)   (paper Eq. 11) + aux losses."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    e = params["we1"].shape[0]                             # possibly padded
+
+    info = _route(params, xf, cfg, rng, train, e)
+
+    dropped = jnp.float32(0.0)
+    if cfg.dispatch == "sort":
+        y = _apply_sort(params, xf, cfg, info, e)
+    elif cfg.dispatch == "shard_map":
+        y, dropped = _apply_shard_map(params, xf, cfg, info, e)
+    else:
+        y, dropped = _apply_einsum(params, xf, cfg, info, e)
+
+    if cfg.n_shared_experts:
+        act = act_fn(cfg.activation)
+        hs = jnp.einsum("nd,edg->eng", xf, params["shared_w1"].astype(xf.dtype))
+        us = act(hs)
+        if cfg.glu_experts:
+            us = us * jnp.einsum("nd,edg->eng", xf,
+                                 params["shared_w1g"].astype(xf.dtype))
+        y = y + jnp.einsum("eng,egd->nd", us, params["shared_w2"].astype(xf.dtype))
+
+    reg = REGULARIZERS[cfg.reg_kind](info, cfg.n_experts)
+    aux = {"moe_reg": cfg.reg_gamma * reg, "moe_dropped": dropped}
+    if collect_stats:
+        aux["usage"] = usage_stats(info, cfg.n_experts)
+    return y.reshape(*lead, d), aux

@@ -1,0 +1,86 @@
+"""Product-Key Memories (paper Sec. 3.2, App. A.3; Lample et al. 2019).
+
+Modifications made by the paper (which we follow):
+  - no batch norm,
+  - the input is sliced directly into two halves (no query projection),
+  - same learning rate as the rest of the network,
+  - ReLU (non-competitive) activation instead of softmax is the paper's improvement;
+    both are available via cfg.activation,
+  - optionally the paper's dense-equivalent init ('PKM + init' row of Tab. 6).
+
+Key property (tested): applying top-K to u_a and u_b before the Cartesian combine
+yields K^2 candidates that PROVABLY contain the true top-K of the full
+u[i] = u_a[i mod sqrt(dff)] + u_b[i // sqrt(dff)].
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import FFNConfig
+from . import init as initlib
+
+
+def init_pkm(key, d_model: int, cfg: FFNConfig, n_layers: int,
+             dtype=jnp.float32) -> Dict:
+    ka, kb, kv = jax.random.split(key, 3)
+    h, ns = cfg.pkm_heads, cfg.n_subkeys
+    half = d_model // 2
+    if cfg.sigma_moe_init:
+        s_k = initlib.dense_std_in(d_model, n_layers)
+        s_v = initlib.dense_std_out(cfg.n_values, n_layers)
+    else:
+        s_k = (d_model) ** -0.5
+        s_v = (cfg.n_values) ** -0.5
+    return {
+        "keys_a": initlib.normal(ka, (h, half, ns), s_k, dtype),
+        "keys_b": initlib.normal(kb, (h, half, ns), s_k, dtype),
+        "values": initlib.normal(kv, (ns * ns, d_model), s_v, dtype),
+    }
+
+
+def apply_pkm(params: Dict, x: jax.Array, cfg: FFNConfig) -> Tuple[jax.Array, Dict]:
+    h, ns, knn = cfg.pkm_heads, cfg.n_subkeys, cfg.pkm_knn
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    xa, xb = jnp.split(xf, 2, axis=-1)                       # (N, d/2) each
+
+    ua = jnp.einsum("nd,hds->nhs", xa, params["keys_a"].astype(x.dtype))  # (N, H, ns)
+    ub = jnp.einsum("nd,hds->nhs", xb, params["keys_b"].astype(x.dtype))
+
+    va, ia = jax.lax.top_k(ua, knn)                          # (N, H, K)
+    vb, ib = jax.lax.top_k(ub, knn)
+
+    # Cartesian combine (Eq. 8): scores s[i,j] = ua[i] + ub[j]; the true top-K of the
+    # full u is guaranteed to be within these K^2 candidates.
+    cand = va[..., :, None] + vb[..., None, :]               # (N, H, K, K)
+    cand = cand.reshape(*cand.shape[:-2], knn * knn)
+    top, flat = jax.lax.top_k(cand, knn)                     # (N, H, K)
+    sel_a = jnp.take_along_axis(ia, flat // knn, axis=-1)    # index into u_a
+    sel_b = jnp.take_along_axis(ib, flat % knn, axis=-1)
+    # full index: i = i_b * ns + i_a  (u[i] = u_b[i // ns] + u_a[i mod ns], Eq. 8)
+    vidx = sel_b * ns + sel_a                                # (N, H, K)
+
+    if cfg.activation == "softmax":
+        w = jax.nn.softmax(top, axis=-1)
+    else:  # relu -- the paper's non-competitive choice
+        w = jax.nn.relu(top)
+
+    vals = params["values"].astype(x.dtype)[vidx]            # (N, H, K, d)
+    y = jnp.einsum("nhk,nhkd->nd", w.astype(vals.dtype), vals)
+    return y.reshape(*lead, d), {}
+
+
+def pkm_full_scores(params: Dict, x: jax.Array, cfg: FFNConfig) -> jax.Array:
+    """Oracle: the full u vector (N, H, ns*ns) -- for property tests only."""
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    xa, xb = jnp.split(xf, 2, axis=-1)
+    ua = jnp.einsum("nd,hds->nhs", xa, params["keys_a"])
+    ub = jnp.einsum("nd,hds->nhs", xb, params["keys_b"])
+    ns = cfg.n_subkeys
+    # u[i] = u_b[i // ns] + u_a[i mod ns]
+    return (ub[..., :, None] + ua[..., None, :]).reshape(*ua.shape[:-1], ns * ns)

@@ -1,0 +1,52 @@
+"""Dense / GLU / Top-K-activation feedforward blocks (paper Sec. 2 & 3.1).
+
+Functional init/apply convention used across the repo::
+
+    params = init_*(key, d_model, cfg, n_layers, dtype)
+    y, aux = apply_*(params, x, cfg, ...)
+
+x: (..., d_model). aux is a dict of scalars (regularizer losses etc.).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..common import act_fn
+from ..configs.base import FFNConfig
+from . import init as initlib
+
+
+def init_dense(key, d_model: int, cfg: FFNConfig, n_layers: int,
+               dtype=jnp.float32) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1 = initlib.dense_std_in(d_model, n_layers)
+    s2 = initlib.dense_std_out(cfg.d_ff, n_layers)
+    p = {
+        "w1": initlib.normal(k1, (d_model, cfg.d_ff), s1, dtype),
+        "w2": initlib.normal(k2, (cfg.d_ff, d_model), s2, dtype),
+    }
+    if cfg.kind == "glu":
+        p["w3"] = initlib.normal(k3, (d_model, cfg.d_ff), s1, dtype)
+    return p
+
+
+def apply_dense(params: Dict, x: jax.Array, cfg: FFNConfig) -> Tuple[jax.Array, Dict]:
+    """dense | glu | topk. Top-K (Sec. 3.1): keep the K largest activations of u.
+
+    Note (paper): top-K saves only the DOWN-projection compute; the full up-projection
+    u = act(W1 x) is still required to *find* the top-K.
+    """
+    act = act_fn(cfg.activation)
+    u = act(jnp.einsum("...d,df->...f", x, params["w1"].astype(x.dtype)))
+    if cfg.kind == "glu":
+        u = u * jnp.einsum("...d,df->...f", x, params["w3"].astype(x.dtype))
+    if cfg.kind == "topk" and cfg.topk_k and cfg.topk_k < cfg.d_ff:
+        # arg-topk mask (Eq. 6-7). With ReLU, u >= 0, so thresholding at the K-th
+        # largest value zeroes exactly the complement set.
+        kth = jax.lax.top_k(u, cfg.topk_k)[0][..., -1:]
+        u = jnp.where(u >= kth, u, 0.0).astype(u.dtype)
+    y = jnp.einsum("...f,fd->...d", u, params["w2"].astype(x.dtype))
+    return y, {}

@@ -1,0 +1,3 @@
+from .pipeline import DataIterator, make_dataset
+
+__all__ = ["DataIterator", "make_dataset"]

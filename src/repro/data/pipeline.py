@@ -1,0 +1,101 @@
+"""Data pipeline: deterministic synthetic LM streams and byte-level text corpora,
+behind a sharding-aware, *checkpointable* iterator.
+
+Determinism/elasticity contract: the global batch for step t is a pure function of
+(seed, t). Each host materializes only its shard (host_slice), so restarts and
+elastic re-sharding reproduce the exact token stream -- the property fault-tolerant
+training needs (resume mid-epoch without data skew).
+
+Synthetic stream: a mixture of Zipf-distributed unigrams and a copy/induction task
+(repeat a random prefix) so that models have learnable structure (loss decreases
+measurably within tens of steps -- used by the integration tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DatasetSpec:
+    kind: str                  # "synthetic" | "text"
+    vocab_size: int
+    data: Optional[np.ndarray] = None      # token ids for kind="text"
+
+
+def make_dataset(source: str, vocab_size: int) -> DatasetSpec:
+    if source == "synthetic":
+        return DatasetSpec(kind="synthetic", vocab_size=vocab_size)
+    # byte/char-level corpus from a local file (enwik8-style)
+    raw = np.frombuffer(open(source, "rb").read(), dtype=np.uint8)
+    vocab = int(raw.max()) + 1
+    return DatasetSpec(kind="text", vocab_size=max(vocab, vocab_size),
+                       data=raw.astype(np.int32))
+
+
+class DataIterator:
+    """Stateful, checkpointable iterator producing (tokens,) batches.
+
+    state = {"step": int}; `restore(state)` resumes the exact stream.
+    """
+
+    def __init__(self, spec: DatasetSpec, global_batch: int, seq_len: int,
+                 seed: int = 0, host_index: int = 0, host_count: int = 1):
+        self.spec = spec
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.host_index = host_index
+        self.host_count = host_count
+        assert global_batch % host_count == 0
+        self.local_batch = global_batch // host_count
+        self.step = 0
+
+    # ------------------------------------------------------------------ state
+    def state(self) -> Dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state: Dict) -> None:
+        self.step = int(state["step"])
+        self.seed = int(state.get("seed", self.seed))
+
+    # ------------------------------------------------------------------ batch
+    def _rng_for(self, step: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed, step))
+
+    def _synthetic_batch(self, step: int) -> np.ndarray:
+        rng = self._rng_for(step)
+        v = self.spec.vocab_size
+        b, s = self.global_batch, self.seq_len
+        # Zipf unigrams
+        ranks = np.arange(1, v + 1)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        toks = rng.choice(v, size=(b, s), p=probs)
+        # induction structure: copy a window so next-token prediction is learnable
+        half = s // 2
+        if half > 1:
+            toks[:, half:half * 2] = toks[:, :half]
+        return toks.astype(np.int32)
+
+    def _text_batch(self, step: int) -> np.ndarray:
+        rng = self._rng_for(step)
+        data = self.spec.data
+        b, s = self.global_batch, self.seq_len
+        starts = rng.integers(0, len(data) - s - 1, size=(b,))
+        return np.stack([data[st:st + s] for st in starts]).astype(np.int32)
+
+    def next(self) -> Dict[str, np.ndarray]:
+        full = (self._synthetic_batch(self.step) if self.spec.kind == "synthetic"
+                else self._text_batch(self.step))
+        lo = self.host_index * self.local_batch
+        batch = {"tokens": full[lo:lo + self.local_batch]}
+        self.step += 1
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next()

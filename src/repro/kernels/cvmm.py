@@ -1,0 +1,131 @@
+"""Pallas TPU kernels for CVMM — conditional (grouped) matmul, the paper's CUDA
+kernel adapted to the TPU memory hierarchy (DESIGN.md Sec. 4).
+
+Layout contract (established by ops.py): rows are sorted by expert and each expert's
+row-range is padded to a multiple of the row tile TM, so **every (TM, K) row tile
+belongs to exactly one expert**. A scalar-prefetch array ``tile_expert`` maps row-tile
+index -> expert id; BlockSpec index_maps use it to stream the right expert's weight
+block HBM->VMEM. This replaces the CUDA kernel's shared-memory reuse of the sorted
+expert matrix with Mosaic-scheduled DMA of one (K, TN) weight tile per grid step.
+
+Forward:  out[t] = x[t] @ w[tile_expert[t]]          grid (m_tiles, n_tiles)
+dW:       dw[e]  = sum_{t: expert(t)=e} x[t]^T g[t]  grid (k_tiles, n_tiles, m_tiles)
+          (m innermost; tile_expert is non-decreasing, so output-block revisits are
+          consecutive and accumulation is legal on TPU.)
+dX reuses the forward kernel with w transposed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TM = 128            # row tile (MXU-aligned)
+LANE = 128          # lane multiple for K / N
+VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _pick_tn(k_pad: int, n_pad: int, bytes_per_el: int) -> int:
+    """Largest N tile (multiple of 128, <= n_pad) whose working set fits VMEM."""
+    for tn in (512, 384, 256, 128):
+        if tn > n_pad:
+            continue
+        if n_pad % tn:
+            continue
+        ws = TM * k_pad * bytes_per_el + k_pad * tn * bytes_per_el + TM * tn * 4
+        if ws <= VMEM_BUDGET:
+            return tn
+    return 128
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(tile_expert_ref, x_ref, w_ref, o_ref):
+    # x_ref: (TM, K), w_ref: (1, K, TN), o_ref: (TM, TN)
+    acc = jnp.dot(x_ref[...], w_ref[0],
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def cvmm_pallas(x_pad: jax.Array, tile_expert: jax.Array, w: jax.Array,
+                *, interpret: bool = False) -> jax.Array:
+    """x_pad (M_pad, K_pad) sorted+tile-aligned rows; tile_expert (M_pad//TM,) int32;
+    w (E, K_pad, N_pad). Returns (M_pad, N_pad)."""
+    m_pad, k_pad = x_pad.shape
+    e, k_w, n_pad = w.shape
+    assert k_w == k_pad and m_pad % TM == 0 and k_pad % LANE == 0 and n_pad % LANE == 0
+    tn = _pick_tn(k_pad, n_pad, x_pad.dtype.itemsize)
+    grid = (m_pad // TM, n_pad // tn)
+
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((TM, k_pad), lambda i, j, te: (i, 0)),
+                pl.BlockSpec((1, k_pad, tn), lambda i, j, te: (te[i], 0, j)),
+            ],
+            out_specs=pl.BlockSpec((TM, tn), lambda i, j, te: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), x_pad.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(tile_expert, x_pad, w)
+
+
+# ---------------------------------------------------------------------------
+# dW kernel (grouped outer-product accumulation)
+# ---------------------------------------------------------------------------
+
+def _dw_kernel(tile_expert_ref, x_ref, g_ref, o_ref):
+    # grid (k_tiles, n_tiles, m_tiles); m innermost.
+    m = pl.program_id(2)
+    e_now = tile_expert_ref[m]
+    e_prev = tile_expert_ref[jnp.maximum(m - 1, 0)]
+    first = jnp.logical_or(m == 0, e_now != e_prev)
+    acc = jax.lax.dot_general(
+        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (TK, TN)
+
+    @pl.when(first)
+    def _init():
+        o_ref[0] = acc
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        o_ref[0] += acc
+
+
+def cvmm_dw_pallas(x_pad: jax.Array, tile_expert: jax.Array, g_pad: jax.Array,
+                   n_experts: int, *, interpret: bool = False) -> jax.Array:
+    """dW (E, K_pad, N_pad) float32 from tile-aligned x (M_pad, K_pad), g (M_pad, N_pad)."""
+    m_pad, k_pad = x_pad.shape
+    _, n_pad = g_pad.shape
+    assert m_pad % TM == 0 and k_pad % LANE == 0 and n_pad % LANE == 0
+    tk = _pick_tn(TM, k_pad, x_pad.dtype.itemsize)
+    tn = _pick_tn(TM, n_pad, g_pad.dtype.itemsize)
+    grid = (k_pad // tk, n_pad // tn, m_pad // TM)
+
+    return pl.pallas_call(
+        _dw_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((TM, tk), lambda k, n, m, te: (m, k)),
+                pl.BlockSpec((TM, tn), lambda k, n, m, te: (m, n)),
+            ],
+            out_specs=pl.BlockSpec((1, tk, tn), lambda k, n, m, te: (te[m], k, n)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_experts, k_pad, n_pad), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(tile_expert, x_pad, g_pad)

@@ -1,0 +1,145 @@
+"""jit-ready CVMM wrapper: layout transformation + backend dispatch + custom_vjp.
+
+Backends
+--------
+"pallas"   The TPU kernel (cvmm.py). On CPU it runs in interpret mode (the kernel body
+           executes in Python) — used by the test suite to validate the kernel logic.
+"ragged"   jax.lax.ragged_dot — XLA's grouped matmul; differentiable; the default on
+           CPU and a correctness cross-check on TPU.
+"ref"      Pure-jnp one-hot oracle (kernels/ref.py), O(N*E) — tests only.
+
+The public ``cvmm(x, group_sizes, w)`` takes rows already *sorted by expert*
+(group_sizes sums to rows) and returns x[i] @ w[expert(i)].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import dtypes
+
+from ..common import round_up
+from . import ref as refk
+from .cvmm import TM, LANE, cvmm_dw_pallas, cvmm_pallas
+
+_FORCED_IMPL: Optional[str] = None
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    global _FORCED_IMPL
+    _FORCED_IMPL = impl
+
+
+def default_impl() -> str:
+    if _FORCED_IMPL:
+        return _FORCED_IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "ragged"
+
+
+# ---------------------------------------------------------------------------
+# Tile-aligned layout (megablocks-style)
+# ---------------------------------------------------------------------------
+
+def _tile_layout(group_sizes: jax.Array, m: int, e: int):
+    """Map sorted rows to a layout where each expert's range is TM-aligned.
+
+    Returns (new_pos (m,), tile_expert (m_pad//TM,), m_pad). m_pad is a static
+    upper bound m + e*TM; slack tiles are all-zero and clamped to the last expert.
+    """
+    gs = group_sizes.astype(jnp.int32)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(gs)])[:-1]
+    ps = ((gs + TM - 1) // TM) * TM                       # padded group sizes
+    offs_p = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(ps)])[:-1]
+    rows = jnp.arange(m, dtype=jnp.int32)
+    re = refk.row_experts(gs, m).astype(jnp.int32)
+    new_pos = offs_p[re] + (rows - offs[re])
+    m_pad = round_up(m, TM) + e * TM
+    n_tiles = m_pad // TM
+    ends_p = jnp.cumsum(ps)
+    tile_expert = jnp.searchsorted(ends_p, jnp.arange(n_tiles, dtype=jnp.int32) * TM,
+                                   side="right").astype(jnp.int32)
+    tile_expert = jnp.minimum(tile_expert, e - 1)         # clamp slack tiles
+    return new_pos, tile_expert, m_pad
+
+
+def _pad_lane(a: jax.Array, axis: int) -> jax.Array:
+    size = a.shape[axis]
+    pad = round_up(size, LANE) - size
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+# ---------------------------------------------------------------------------
+# Pallas path with custom_vjp
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _cvmm_pallas_vjp(x, group_sizes, w, interpret):
+    return _pallas_fwd_impl(x, group_sizes, w, interpret)
+
+
+def _pallas_fwd_impl(x, group_sizes, w, interpret):
+    m, k = x.shape
+    e, _, n = w.shape
+    new_pos, tile_expert, m_pad = _tile_layout(group_sizes, m, e)
+    x_pad = jnp.zeros((m_pad, round_up(k, LANE)), x.dtype)
+    x_pad = x_pad.at[new_pos].set(_pad_lane(x, 1))
+    w_pad = _pad_lane(_pad_lane(w, 1), 2)
+    out_pad = cvmm_pallas(x_pad, tile_expert, w_pad, interpret=interpret)
+    return out_pad[new_pos, :n]
+
+
+def _pallas_fwd(x, group_sizes, w, interpret):
+    return _pallas_fwd_impl(x, group_sizes, w, interpret), (x, group_sizes, w)
+
+
+def _pallas_bwd(interpret, res, g):
+    x, group_sizes, w = res
+    m, k = x.shape
+    e, _, n = w.shape
+    # dX: same grouped matmul against w^T.
+    dx = _pallas_fwd_impl(g, group_sizes, jnp.swapaxes(w, 1, 2), interpret)
+    # dW: grouped outer-product accumulation kernel on the tile-aligned layout.
+    new_pos, tile_expert, m_pad = _tile_layout(group_sizes, m, e)
+    x_pad = jnp.zeros((m_pad, round_up(k, LANE)), x.dtype)
+    x_pad = x_pad.at[new_pos].set(_pad_lane(x, 1))
+    g_pad = jnp.zeros((m_pad, round_up(n, LANE)), g.dtype)
+    g_pad = g_pad.at[new_pos].set(_pad_lane(g, 1))
+    dw = cvmm_dw_pallas(x_pad, tile_expert, g_pad, e, interpret=interpret)
+    # Blocks of experts with zero rows are never visited by the kernel (their padded
+    # group has no tiles) and stay uninitialized -- mask them to zero explicitly.
+    dw = jnp.where((group_sizes > 0)[:, None, None], dw, 0.0)
+    dw = dw[:, :k, :n].astype(w.dtype)
+    d_gs = np.zeros(group_sizes.shape, dtypes.float0)
+    return dx.astype(x.dtype), d_gs, dw
+
+
+_cvmm_pallas_vjp.defvjp(_pallas_fwd, _pallas_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def cvmm(x: jax.Array, group_sizes: jax.Array, w: jax.Array,
+         impl: Optional[str] = None) -> jax.Array:
+    """Grouped matmul: rows of x (sorted by expert, sizes in group_sizes) times
+    w (E, K, N). Returns (rows, N)."""
+    impl = impl or default_impl()
+    if impl == "ragged":
+        return jax.lax.ragged_dot(x, w.astype(x.dtype),
+                                  group_sizes.astype(jnp.int32))
+    if impl == "ref":
+        return refk.cvmm_ref(x, group_sizes, w)
+    if impl == "pallas":
+        return _cvmm_pallas_vjp(x, group_sizes, w.astype(x.dtype),
+                                jax.default_backend() != "tpu")
+    if impl == "pallas_interpret":
+        return _cvmm_pallas_vjp(x, group_sizes, w.astype(x.dtype), True)
+    raise ValueError(f"unknown cvmm impl {impl}")

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the CVMM (conditional vector-matrix multiply) kernels.
+
+CVMM (paper Eq. 26): given rows V (N, M), per-row matrix selector S (N,) and matrices
+W (E, M, L):  CVMM(V, S, W)[n] = V[n] @ W[S[n]].
+
+The kernel-facing layout is *sorted-by-expert* with group_sizes (E,) summing to N
+(the paper's CUDA kernel performs the same sort as preprocessing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_experts(group_sizes: jax.Array, n_rows: int) -> jax.Array:
+    """Expert id of each sorted row: row i belongs to the group whose cumulative
+    range contains i."""
+    ends = jnp.cumsum(group_sizes)
+    return jnp.searchsorted(ends, jnp.arange(n_rows), side="right")
+
+
+def cvmm_ref(x: jax.Array, group_sizes: jax.Array, w: jax.Array) -> jax.Array:
+    """(N, K) x (E,) x (E, K, L) -> (N, L); fp32 accumulation."""
+    e = w.shape[0]
+    re = row_experts(group_sizes, x.shape[0])
+    onehot = jax.nn.one_hot(re, e, dtype=jnp.float32)
+    out = jnp.einsum("nk,ekl,ne->nl", x.astype(jnp.float32),
+                     w.astype(jnp.float32), onehot)
+    return out.astype(x.dtype)
+
+
+def cvmm_dw_ref(x: jax.Array, group_sizes: jax.Array, g: jax.Array,
+                n_experts: int) -> jax.Array:
+    """Grad wrt W: dW[e] = sum_{rows n of expert e} x[n]^T g[n].  (E, K, L), fp32."""
+    re = row_experts(group_sizes, x.shape[0])
+    onehot = jax.nn.one_hot(re, n_experts, dtype=jnp.float32)
+    return jnp.einsum("nk,nl,ne->ekl", x.astype(jnp.float32),
+                      g.astype(jnp.float32), onehot)

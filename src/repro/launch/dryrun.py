@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-touching import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on the
+production meshes, prove the distribution config is coherent, and extract the
+roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k \
+        --mesh both [--sp] [--remat full] [--tag baseline] [--out benchmarks/dryrun_results]
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all          # all 40 cells
+
+Per cell it prints compiled.memory_analysis() (fits-in-HBM evidence) and
+cost_analysis(), and writes <out>/<tag>/<arch>__<shape>__<mesh>.json with the
+roofline report (EXPERIMENTS.md is generated from these files).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+
+def _cell_applicable(cfg, shape) -> (bool, str):
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k requires sub-quadratic attention (skip: full-attn)"
+    return True, ""
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, sp: bool, remat: str,
+             ce_chunks: int, dispatch: str, out_dir: str, tag: str,
+             ffn: str = None, grad_accum: int = 1, verbose: bool = True):
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import SHAPES, get_config
+    from ..models import build_model
+    from ..roofline import analyze_compiled
+    from ..runtime.steps import init_train_state, make_train_step
+    from ..configs.base import OptimizerConfig
+    from ..sharding import TRAIN_RULES, mesh_context, tree_shardings
+    from ..sharding.logical import serve_rules_for
+    from .mesh import make_production_mesh
+
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, why = _cell_applicable(cfg, shape)
+    cellname = f"{arch}__{shape_name}__{mesh_kind}"
+    if not ok:
+        result = {"cell": cellname, "status": "skipped", "reason": why,
+                  "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag}
+        if out_dir:
+            d = os.path.join(out_dir, tag)
+            os.makedirs(d, exist_ok=True)
+            with open(os.path.join(d, cellname + ".json"), "w") as f:
+                json.dump(result, f, indent=1)
+        return result
+
+    if dispatch and cfg.ffn.kind in ("sigma_moe", "switch", "sbase", "noisy_topk"):
+        cfg = cfg.with_ffn(dataclasses.replace(cfg.ffn, dispatch=dispatch))
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    model = build_model(cfg, remat=remat, sequence_parallel=sp,
+                        ce_chunks=ce_chunks, ep_degree=mesh.shape["model"],
+                        ffn=ffn)
+    cfg = model.cfg
+
+    t0 = time.time()
+    with mesh_context(mesh):
+        rules = (TRAIN_RULES if shape.mode == "train" else
+                 serve_rules_for(cfg.attention.n_kv_heads, mesh.shape["model"]))
+
+        def sds_with_shardings(tree):
+            sh = tree_shardings(tree, mesh, rules)
+            return jax.tree_util.tree_map(
+                lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+                tree, sh)
+
+        inputs = model.input_specs(shape)
+        inputs_sds = sds_with_shardings(inputs)
+
+        if shape.mode == "train":
+            opt_cfg = OptimizerConfig()
+            state = jax.eval_shape(
+                lambda k: init_train_state(model, k, opt_cfg), jax.random.PRNGKey(0))
+            state_sds = sds_with_shardings(state)
+            step = make_train_step(model, opt_cfg, grad_accum=grad_accum)
+            rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(
+                state_sds, inputs_sds, rng_sds)
+        elif shape.mode == "prefill":
+            params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            params_sds = sds_with_shardings(params)
+            cache = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cache_sds = sds_with_shardings(cache)
+            lowered = jax.jit(model.prefill, donate_argnums=(2,)).lower(
+                params_sds, inputs_sds, cache_sds)
+        else:  # decode
+            params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            params_sds = sds_with_shardings(params)
+            cache = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cache_sds = sds_with_shardings(cache)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(model.decode_step, donate_argnums=(1,)).lower(
+                params_sds, cache_sds, inputs_sds["token"], pos_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        report = analyze_compiled(compiled, arch=arch, shape=shape,
+                                  mesh_name=mesh_kind, n_chips=n_chips, cfg=cfg)
+        mem = compiled.memory_analysis()
+        if verbose:
+            print(f"--- {cellname} ---")
+            print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+            print(f"  memory_analysis: {mem}")
+            ca = report.xla_cost_analysis
+            print(f"  cost_analysis (body-once): {ca}")
+            print(f"  roofline: compute {report.compute_s*1e3:.2f}ms "
+                  f"memory {report.memory_s*1e3:.2f}ms "
+                  f"collective {report.collective_s*1e3:.2f}ms "
+                  f"-> {report.bound}-bound; useful-flops "
+                  f"{report.useful_flops_ratio:.2f}; roofline frac "
+                  f"{report.roofline_fraction:.3f}", flush=True)
+
+    result = dict(report.to_dict(), cell=cellname, status="ok",
+                  lower_s=t_lower, compile_s=t_compile, tag=tag,
+                  sp=sp, remat=remat, ce_chunks=ce_chunks, dispatch=dispatch or "",
+                  grad_accum=grad_accum)
+    if out_dir:
+        d = os.path.join(out_dir, tag)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, cellname + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all (arch x shape) cells")
+    ap.add_argument("--sp", action="store_true", help="sequence-parallel residuals")
+    ap.add_argument("--remat", default="full", choices=["none", "dots", "full"])
+    ap.add_argument("--ce-chunks", type=int, default=16)
+    ap.add_argument("--dispatch", default="", help="override MoE dispatch path")
+    ap.add_argument("--ffn", default=None, help="swap FFN kind (e.g. sigma_moe)")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default="benchmarks/dryrun_results")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    from ..configs import ASSIGNED_ARCHS, SHAPES
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                cell = f"{arch}__{shape}__{mesh}"
+                path = os.path.join(args.out, args.tag, cell + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip existing] {cell}")
+                    continue
+                try:
+                    r = run_cell(arch, shape, mesh, sp=args.sp, remat=args.remat,
+                                 ce_chunks=args.ce_chunks, dispatch=args.dispatch,
+                                 out_dir=args.out, tag=args.tag, ffn=args.ffn,
+                                 grad_accum=args.grad_accum)
+                    if r["status"] == "skipped":
+                        print(f"[skipped] {cell}: {r['reason']}")
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((cell, str(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for c, e in failures:
+            print(f"  {c}: {e[:200]}")
+        return 1
+    print("\nALL CELLS OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

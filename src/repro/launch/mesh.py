@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Functions (not module constants) so importing never touches jax device state --
+required because dryrun.py must set XLA_FLAGS before the first jax init.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips. Multi-pod adds the DCN 'pod'
+    axis: (pod=2, data=16, model=16) = 512 chips.
+
+    When the process exposes more devices than the mesh needs (the dry-run forces
+    512 host devices and then builds the 256-chip single-pod mesh), the first
+    prod(shape) devices are used.
+    """
+    import math
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices for mesh {shape}, have {len(devs)} "
+                           "(dry-run must set xla_force_host_platform_device_count)")
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """Whatever this host has: (data=n/model, model) -- used by tests/examples."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,44 @@
+"""FFN dispatcher: wires the paper's approximators (core/) into model blocks.
+
+Any architecture can swap its FFN via ``FFNConfig.kind`` — this is exactly the
+paper's thesis (the technique applies to *every* MLP block, at any scale).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import FFNConfig
+from ..core.moe import apply_moe, init_moe
+from ..core.pkm import apply_pkm, init_pkm
+from ..core.topk_mlp import apply_dense, init_dense
+
+MOE_KINDS = ("sigma_moe", "switch", "sbase", "noisy_topk")
+
+
+def init_ffn(key, d_model: int, cfg: FFNConfig, n_layers: int,
+             dtype=jnp.float32, ep_degree: int = 0) -> Dict:
+    if cfg.kind == "none":
+        return {}
+    if cfg.kind in MOE_KINDS:
+        return init_moe(key, d_model, cfg, n_layers, dtype, ep_degree)
+    if cfg.kind == "pkm":
+        return init_pkm(key, d_model, cfg, n_layers, dtype)
+    return init_dense(key, d_model, cfg, n_layers, dtype)
+
+
+def apply_ffn(params: Dict, x: jax.Array, cfg: FFNConfig, *,
+              rng: Optional[jax.Array] = None, train: bool = False
+              ) -> Tuple[jax.Array, Dict]:
+    zero_aux = {"moe_reg": jnp.float32(0.0), "moe_dropped": jnp.float32(0.0)}
+    if cfg.kind == "none":
+        return jnp.zeros_like(x), zero_aux
+    if cfg.kind in MOE_KINDS:
+        return apply_moe(params, x, cfg, rng=rng, train=train)
+    if cfg.kind == "pkm":
+        y, _ = apply_pkm(params, x, cfg)
+        return y, zero_aux
+    y, _ = apply_dense(params, x, cfg)
+    return y, zero_aux

@@ -1,0 +1,201 @@
+"""Mamba2 / SSD (state-space duality) block — chunked parallel form for
+training/prefill and O(1) recurrence for decode (arXiv:2405.21060).
+
+Chunked SSD: split the sequence into chunks of length Q. Within a chunk the output is
+an attention-like quadratic form masked by the decay kernel; across chunks a small
+(H, P, N) state is carried by an (associative) scan. Both paths are pure jax.lax, so
+they lower cleanly under pjit at 500k tokens (the long_500k shape).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SSMConfig
+from .layers import rms_norm_simple
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_dim = din + 2 * s.n_groups * s.d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * din + 2 * s.n_groups * s.d_state + nh    # z, x, B, C, dt
+    return {
+        "in_proj": (d ** -0.5) * jax.random.normal(k1, (d, in_dim), dtype),
+        "conv_w": 0.1 * jax.random.normal(k2, (conv_dim, s.d_conv), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(dtype)),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k3, (nh,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))).astype(dtype),
+        "scale": jnp.ones((din,), dtype),                 # gated RMSNorm
+        "out_proj": (din ** -0.5) * jax.random.normal(k4, (din, d), dtype),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., Q) -> (..., Q, Q) lower-triangular pairwise cumulative sums:
+    out[i, j] = a[j+1] + ... + a[i] for i >= j, -inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x (b,s,h,p), dt (b,s,h) >=0, A (h,)<0, B/C (b,s,g,n).
+    Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+    # chunked views: (b, nc, Q, ...)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)                       # broadcast groups->heads
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    a = (dtc.astype(jnp.float32) * A.astype(jnp.float32))  # (b,nc,Q,h) decay logs
+    a = jnp.moveaxis(a, -1, -2)                            # (b,nc,h,Q)
+    a_cum = jnp.cumsum(a, axis=-1)                         # within-chunk cumsum
+
+    # 1) intra-chunk (quadratic within chunk, like masked attention)
+    L = jnp.exp(_segsum(a))                                # (b,nc,h,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bhcqk", Ch.astype(jnp.float32),
+                        Bh.astype(jnp.float32))
+    Lt = jnp.moveaxis(L, 2, 1)                             # (b,h,nc,Q,Q)
+    xdt = xc.astype(jnp.float32) * dtc.astype(jnp.float32)[..., None]
+    y_diag = jnp.einsum("bhcqk,bckhp->bcqhp", scores * Lt, xdt)
+
+    # 2) chunk states: state_c = sum_k decay_to_end[k] * B_k (dt_k x_k)^T
+    decay_end = jnp.exp(a_cum[..., -1:] - a_cum)           # (b,nc,h,Q)
+    de = decay_end.transpose(0, 1, 3, 2)                   # (b,nc,Q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        Bh.astype(jnp.float32), de, xdt)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(a_cum[..., -1])                  # (b,nc,h)
+
+    def scan_body(carry, xs):
+        st_prev = carry                                    # (b,h,p,n)
+        st_c, dec_c = xs                                   # (b,h,p,n), (b,h)
+        st = st_c + dec_c[..., None, None] * st_prev
+        return st, st_prev
+
+    st0 = (init_state.astype(jnp.float32) if init_state is not None
+           else jnp.zeros((b, h, p, n), jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        scan_body, st0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (b,nc,h,p,n)
+
+    # 4) inter-chunk contribution: y_off = C_t . (decay_from_start_t * state_prev)
+    decay_start = jnp.exp(a_cum)                           # (b,nc,h,Q) decay 0..t
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", Ch.astype(jnp.float32),
+                       prev_states, decay_start)
+
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, p)[:, :s]
+    return y, final_state
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """One-token recurrence: state (b,h,p,n) -> (y (b,h,p), new_state)."""
+    dec = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))      # (b,h)
+    upd = jnp.einsum("bhn,bhp->bhpn", B.astype(jnp.float32),
+                     (x * dt[..., None]).astype(jnp.float32))
+    new_state = dec[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, C.astype(jnp.float32))
+    return y, new_state
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                   cache: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B,S,C), w (C,K). Returns (y, new_cache (B,K-1,C))."""
+    k = w.shape[-1]
+    if cache is None:
+        prefix = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        prefix = cache.astype(x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    new_cache = xp[:, -(k - 1):, :]
+    windows = [xp[:, i:i + x.shape[1], :] for i in range(k)]
+    y = sum(windows[i] * w[:, i] for i in range(k)) + b
+    return y, new_cache
+
+
+def apply_ssm(params: Dict, x: jax.Array, cfg: ModelConfig, *,
+              cache: Optional[Dict] = None) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full mamba2 block. cache = {"conv": (B,K-1,C), "state": (B,H,P,N)} for decode."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    din = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    g, n = s_cfg.n_groups, s_cfg.d_state
+
+    proj = jnp.einsum("bsd,di->bsi", x, params["in_proj"].astype(x.dtype))
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + g * n, 2 * din + 2 * g * n], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, new_conv = _conv1d_causal(conv_in, params["conv_w"].astype(x.dtype),
+                                        params["conv_b"].astype(x.dtype),
+                                        cache["conv"] if cache else None)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [din, din + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xin.reshape(b, s, nh, s_cfg.head_dim)
+    Bh = Bc.reshape(b, s, g, n)
+    Ch = Cc.reshape(b, s, g, n)
+
+    new_cache = None
+    if cache is not None and s == 1:
+        rep = nh // g
+        Bh1 = jnp.repeat(Bh[:, 0], rep, axis=1)            # (b, h, n)
+        Ch1 = jnp.repeat(Ch[:, 0], rep, axis=1)
+        y1, new_state = ssd_decode_step(xh[:, 0], dt[:, 0], A, Bh1, Ch1,
+                                        cache["state"])
+        y = y1[:, None]
+        new_cache = {"conv": new_conv, "state": new_state}
+    else:
+        y, final_state = ssd_chunked(xh, dt, A, Bh, Ch, s_cfg.chunk,
+                                     cache["state"] if cache else None)
+        if cache is not None:
+            new_cache = {"conv": new_conv, "state": final_state}
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm_simple(y, params["scale"])
+    return jnp.einsum("bsi,id->bsd", y, params["out_proj"].astype(x.dtype)), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    conv_dim = din + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, s.n_heads(d), s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,42 @@
+"""Model builder: arch name / ModelConfig -> LM instance."""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from ..configs.archs import get_config
+from ..configs.base import ModelConfig
+from .lm import LM
+
+
+def build_model(cfg_or_name: Union[str, ModelConfig], *, remat: str = "none",
+                sequence_parallel: bool = False, ce_chunks: int = 0,
+                ep_degree: int = 0, ffn: Optional[str] = None,
+                **overrides) -> LM:
+    cfg = (get_config(cfg_or_name) if isinstance(cfg_or_name, str)
+           else cfg_or_name)
+    if overrides:
+        cfg = cfg.override(**overrides)
+    if ffn is not None and ffn != cfg.ffn.kind:
+        # sigma-MoE-ify (or otherwise swap) the FFN of any architecture: the paper's
+        # technique as a first-class drop-in (parameter-matched G*N_E = d_ff).
+        from ..configs.base import FFNConfig, moe_ffn
+        d_ff = cfg.ffn.d_ff or 4 * cfg.d_model
+        if ffn == "sigma_moe":
+            g = 128 if d_ff % 128 == 0 else max(64, d_ff // 16)
+            ne = max(2, d_ff // g)
+            cfg = cfg.with_ffn(moe_ffn(ne, g, max(1, min(4, ne // 2)),
+                                       glu_experts=cfg.ffn.kind == "glu",
+                                       reg_gamma=1e-3, reg_kind="entropy"))
+        elif ffn == "topk":
+            cfg = cfg.with_ffn(FFNConfig(kind="topk", d_ff=d_ff,
+                                         topk_k=max(64, d_ff // 8)))
+        elif ffn == "pkm":
+            ns = max(4, int(d_ff ** 0.5))
+            cfg = cfg.with_ffn(FFNConfig(kind="pkm", n_subkeys=ns))
+        elif ffn in ("dense", "glu"):
+            cfg = cfg.with_ffn(FFNConfig(kind=ffn, d_ff=d_ff,
+                                         activation=cfg.ffn.activation or "relu"))
+        else:
+            raise ValueError(f"cannot swap ffn to {ffn}")
+    return LM(cfg, remat=remat, sequence_parallel=sequence_parallel,
+              ce_chunks=ce_chunks, ep_degree=ep_degree)

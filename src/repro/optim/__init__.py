@@ -1,0 +1,8 @@
+from .adamw import adamw_init, adamw_update, OptState
+from .schedule import make_schedule
+from .compress import compress_grads, init_compression_state
+from .clip import clip_by_global_norm, global_norm
+
+__all__ = ["adamw_init", "adamw_update", "OptState", "make_schedule",
+           "compress_grads", "init_compression_state", "clip_by_global_norm",
+           "global_norm"]

@@ -1,0 +1,55 @@
+"""AdamW with fp32 master weights (mixed-precision training).
+
+Params live in fp32 (master); compute casts to bf16 at use. m/v are fp32 and inherit
+the parameter sharding (FSDP shards optimizer state for free under GSPMD).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import OptimizerConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def adamw_update(grads, state: OptState, params, cfg: OptimizerConfig,
+                 lr: jax.Array):
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state.step + 1
+    b1, b2, eps = cfg.b1, cfg.b2, cfg.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    gflat = treedef.flatten_up_to(grads)
+    mflat = treedef.flatten_up_to(state.mu)
+    vflat = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(gflat, mflat, vflat, flat)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, mu=new_m, nu=new_v)

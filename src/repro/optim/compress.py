@@ -1,0 +1,49 @@
+"""Error-feedback gradient compression for the cross-pod (DCN) all-reduce.
+
+At 512+ chips the pod axis crosses data-center network, not ICI; compressing the
+gradient exchanged there is a standard distributed-optimization trick. We implement
+compress -> (wire) -> decompress with *error feedback*: the quantization residual is
+added back into the next step's gradient, which keeps SGD/Adam convergence
+(Karimireddy et al. 2019).
+
+Modes: "bf16" (cast), "int8" (per-tensor absmax scale). The compressed representation
+is what a DCN-aware collective would put on the wire; under single-program SPMD we
+apply it before the optimizer so the numerics match the deployed system.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_compression_state(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _roundtrip(g: jax.Array, mode: str) -> jax.Array:
+    if mode == "bf16":
+        return g.astype(jnp.bfloat16).astype(jnp.float32)
+    if mode == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q.astype(jnp.float32) * scale
+    raise ValueError(mode)
+
+
+def compress_grads(grads, err_state, mode: str) -> Tuple[Any, Any]:
+    """Returns (decompressed grads as seen after the wire, new error state)."""
+    if mode == "none":
+        return grads, err_state
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        wire = _roundtrip(gf, mode)
+        return wire.astype(g.dtype), gf - wire
+
+    flat_g, td = jax.tree_util.tree_flatten(grads)
+    flat_e = td.flatten_up_to(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out]))

@@ -1,0 +1,31 @@
+"""LR schedules: cosine (the paper's: 2.5e-4 -> 0 over 100k), WSD (minicpm) and
+constant, all with linear warmup."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import OptimizerConfig
+
+
+def make_schedule(cfg: OptimizerConfig):
+    base = cfg.lr
+    warm = max(cfg.warmup_steps, 0)
+    total = max(cfg.total_steps, 1)
+
+    def sched(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm_lr = base * jnp.minimum(s / jnp.maximum(warm, 1), 1.0)
+        t = jnp.clip((s - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            lr = base * (cfg.final_lr_ratio +
+                         (1 - cfg.final_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        elif cfg.schedule == "wsd":
+            # warmup-stable-decay: stable until 90%, then linear decay.
+            decay_frac = jnp.clip((t - 0.9) / 0.1, 0.0, 1.0)
+            lr = base * (1.0 - (1.0 - cfg.final_lr_ratio) * decay_frac)
+        else:
+            lr = jnp.float32(base)
+        return jnp.where(s < warm, warm_lr, lr)
+
+    return sched

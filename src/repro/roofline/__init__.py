@@ -1,0 +1,5 @@
+from .analysis import RooflineReport, analyze_compiled, V5E
+from .hlo_analysis import HLOCost, analyze_hlo_text
+
+__all__ = ["RooflineReport", "analyze_compiled", "V5E", "HLOCost",
+           "analyze_hlo_text"]

@@ -1,0 +1,3 @@
+from .loss import chunked_cross_entropy
+
+__all__ = ["chunked_cross_entropy"]

@@ -1,0 +1,78 @@
+"""Cross-entropy with bounded logits memory.
+
+For vocab sizes like gemma3's 262k, materializing (tokens, vocab) logits dominates
+activation memory (batch 256 x 4096 seq x 262k vocab = 0.5 PB unsharded). Two levers:
+
+  1. vocab-sharded logits (logical 'vocab' -> model axis) so the softmax reduction is
+     a psum over the TP axis — handled by the sharding constraint below;
+  2. chunking over tokens with remat: forward keeps only one chunk's logits alive;
+     backward recomputes them per chunk.
+
+Both are beyond-paper memory optimizations recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..common import round_up
+from ..sharding.logical import with_logical_constraint
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def _ce_dense(h: jax.Array, w: jax.Array, labels: jax.Array, mask: jax.Array,
+              softcap: float, n_valid_vocab: int = 0) -> jax.Array:
+    """Sum of token CE over valid positions. h (N,D), w (D,V), labels (N,)."""
+    logits = _softcap(jnp.einsum("nd,dv->nv", h, w).astype(jnp.float32), softcap)
+    logits = with_logical_constraint(logits, (None, "vocab"))
+    if n_valid_vocab:      # padded vocab: exclude pad columns from the partition fn
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < n_valid_vocab,
+                           logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum((lse - gold) * mask)
+
+
+def chunked_cross_entropy(h: jax.Array, w: jax.Array, labels: jax.Array,
+                          *, chunks: int = 0, softcap: float = 0.0,
+                          mask: Optional[jax.Array] = None, n_valid_vocab: int = 0
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Mean next-token CE. h (B,S,D), w (D,V), labels (B,S). Returns (mean, n_tok)."""
+    b, s, d = h.shape
+    hf = h.reshape(-1, d)
+    lf = labels.reshape(-1)
+    mf = (mask.reshape(-1).astype(jnp.float32) if mask is not None
+          else jnp.ones((b * s,), jnp.float32))
+    n = hf.shape[0]
+
+    if chunks <= 1:
+        total = _ce_dense(hf, w, lf, mf, softcap, n_valid_vocab)
+    else:
+        npad = round_up(n, chunks)
+        if npad != n:
+            hf = jnp.pad(hf, ((0, npad - n), (0, 0)))
+            lf = jnp.pad(lf, (0, npad - n))
+            mf = jnp.pad(mf, (0, npad - n))
+        hc = hf.reshape(chunks, npad // chunks, d)
+        lc = lf.reshape(chunks, -1)
+        mc = mf.reshape(chunks, -1)
+
+        # remat: logits of each chunk are recomputed in backward, never all alive.
+        ce_fn = jax.checkpoint(
+            lambda hx, lx, mx: _ce_dense(hx, w, lx, mx, softcap, n_valid_vocab),
+            policy=jax.checkpoint_policies.nothing_saveable)
+
+        def body(acc, xs):
+            hx, lx, mx = xs
+            return acc + ce_fn(hx, lx, mx), None
+
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, lc, mc))
+
+    n_tok = jnp.sum(mf)
+    return total / jnp.maximum(n_tok, 1.0), n_tok

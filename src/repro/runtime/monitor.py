@@ -1,0 +1,42 @@
+"""Straggler / health monitoring for long-running multi-pod jobs.
+
+StragglerMonitor keeps an EWMA of step wall-time and flags outliers (a slow host,
+failing HBM, thermal throttling). On a real deployment the `on_straggler` callback
+feeds the cluster orchestrator (evict + restore-from-checkpoint on a hot spare); here
+it logs and counts, and the fault-tolerant loop (launch/train.py) exercises the same
+restart path via checkpoint restore.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, ewma: float = 0.9,
+                 warmup_steps: int = 5,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.threshold = threshold
+        self.ewma_coef = ewma
+        self.warmup = warmup_steps
+        self.on_straggler = on_straggler
+        self.mean: Optional[float] = None
+        self.count = 0
+        self.flagged: List[int] = []
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        self.count += 1
+        if self.mean is None:
+            self.mean = dt
+        if self.count > self.warmup and dt > self.threshold * self.mean:
+            self.flagged.append(step)
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.mean)
+        else:
+            self.mean = self.ewma_coef * self.mean + (1 - self.ewma_coef) * dt
+        return dt

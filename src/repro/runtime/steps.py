@@ -1,0 +1,114 @@
+"""Step builders: jit-able train / prefill / decode steps with mixed precision,
+gradient accumulation, clipping, compression and LR scheduling baked in.
+
+The returned functions are pure (state, batch, rng) -> (state, metrics) and carry
+*all* mutable training state in one pytree, so checkpointing and restart are exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import OptimizerConfig, TrainConfig
+from ..models.lm import LM
+from ..optim import (adamw_init, adamw_update, clip_by_global_norm, compress_grads,
+                     init_compression_state, make_schedule)
+
+
+def init_train_state(model: LM, key, opt_cfg: OptimizerConfig,
+                     use_mems: bool = False, batch: int = 0) -> Dict[str, Any]:
+    params = model.init(key)
+    state = {"params": params, "opt": adamw_init(params)}
+    if opt_cfg.grad_compression != "none":
+        state["err"] = init_compression_state(params)
+    if use_mems and model.cfg.xl_memory:
+        from ..models.stack import init_mems
+        state["mems"] = init_mems(model.cfg, batch, model.dtype)
+    return state
+
+
+def make_train_step(model: LM, opt_cfg: OptimizerConfig,
+                    grad_accum: int = 1):
+    sched = make_schedule(opt_cfg)
+    use_mems = bool(model.cfg.xl_memory)
+
+    def loss_for(params, batch, rng, mems):
+        out = model.loss(params, batch, rng=rng, train=True, mems=mems)
+        loss, aux = out
+        if use_mems:
+            metrics, new_mems = aux
+        else:
+            metrics, new_mems = aux, None
+        return loss, (metrics, new_mems)
+
+    def compute_grads(params, batch, rng, mems):
+        if grad_accum <= 1:
+            (loss, (metrics, new_mems)), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch, rng, mems)
+            return loss, metrics, new_mems, grads
+
+        # microbatching: scan over grad_accum slices, accumulate fp32 grads.
+        def micro(carry, xs):
+            acc, mems_c = carry
+            mb, r = xs
+            (loss, (metrics, new_mems)), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, mb, r, mems_c)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32) / grad_accum, acc, grads)
+            return (acc, new_mems if use_mems else mems_c), (loss, metrics)
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]),
+            batch)
+        rngs = jax.random.split(rng, grad_accum)
+        (grads, new_mems), (losses, metricss) = jax.lax.scan(
+            micro, (zeros, mems), (mbs, rngs))
+        loss = jnp.mean(losses)
+        metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m, 0), metricss)
+        return loss, metrics, (new_mems if use_mems else None), grads
+
+    def train_step(state: Dict[str, Any], batch: Dict, rng) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        mems = state.get("mems")
+        rng = jax.random.fold_in(rng, state["opt"].step)
+        loss, metrics, new_mems, grads = compute_grads(params, batch, rng, mems)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        new_state = dict(state)
+        if "err" in state:
+            grads, new_err = compress_grads(grads, state["err"],
+                                            opt_cfg.grad_compression)
+            new_state["err"] = new_err
+        lr = sched(state["opt"].step)
+        new_params, new_opt = adamw_update(grads, state["opt"], params, opt_cfg, lr)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        if new_mems is not None:
+            new_state["mems"] = new_mems
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: LM):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, rng=None, train=False)
+        return loss, metrics
+    return eval_step
+
+
+def make_prefill_step(model: LM, max_len: int):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(model: LM):
+    def decode_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+    return decode_step

@@ -1,0 +1,36 @@
+"""Process-wide mesh context.
+
+Model code never builds meshes; the launcher installs one here. When no mesh is
+installed (unit tests, single-host runs) the shard_map paths fall back to local
+computation.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev

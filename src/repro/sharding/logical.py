@@ -1,0 +1,209 @@
+"""Logical-axis sharding: parameter/activation names -> PartitionSpec via rule tables.
+
+Every parameter leaf in this repo has a well-known name (w1, wq, emb, ...) whose layout
+is identified by (name, rank). ``PARAM_AXES`` maps those to *logical* axis names;
+``LogicalRules`` maps logical names to mesh axes. Scan-stacked parameters have a
+leading 'layers' dimension, handled by rank-1 lookup.
+
+Two built-in rule sets:
+  TRAIN_RULES  FSDP ('embed'->data) + TP ('ffn','heads','experts','vocab'->model)
+               + DP batch over (pod, data). Optimizer state inherits param specs.
+  SERVE_RULES  TP-only weights (latency path, no per-layer all-gathers), KV cache and
+               batch over (pod, data).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .context import current_mesh
+
+Axis = Union[None, str, Tuple[str, ...]]
+LogicalRules = Dict[str, Axis]
+
+TRAIN_RULES: LogicalRules = {
+    "batch": ("pod", "data"),
+    "seq": None,                 # flipped to "model" by sequence_parallel (perf pass)
+    "vocab": "model",
+    "embed": "data",             # FSDP: gathered per layer inside the scan
+    "embed_nofsdp": None,
+    "ffn": "model",
+    "expert_ff": None,           # EP shards experts; flip to "model" for TP-in-expert
+    "experts": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",
+    "layers": None,
+    "pkm_values": "model",
+    "pkm_keys": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "pos": None,
+}
+
+SERVE_RULES: LogicalRules = dict(
+    TRAIN_RULES,
+    embed=None,                  # no FSDP at inference
+    seq=None,
+    kv_seq=None,                 # cache seq; flipped to "model" by serve_rules_for
+)
+
+# Sequence parallelism: residual-stream activations between blocks are sharded over
+# the TP axis along seq (Korthikanti et al.); cuts stored-activation memory by the
+# TP degree at the cost of gather/scatter at block boundaries.
+SP_RULES: LogicalRules = dict(TRAIN_RULES, seq="model")
+
+
+def serve_rules_for(n_kv_heads: int, model_axis_size: int) -> LogicalRules:
+    """Cache sharding policy: shard KV heads over TP when divisible; otherwise
+    shard the cache SEQUENCE over TP (context-parallel decode: the softmax
+    reduction over a sharded seq becomes an SPMD psum). Without this, a kv=8
+    cache on 16-way TP replicates -- 17 GB/chip for llama3 decode_32k, over HBM."""
+    if n_kv_heads and model_axis_size and n_kv_heads % model_axis_size == 0:
+        return SERVE_RULES
+    return dict(SERVE_RULES, kv_seq="model", kv_heads=None)
+
+# (leaf name, logical rank) -> logical axes. Rank excludes the stacked 'layers' dim.
+PARAM_AXES: Dict[Tuple[str, int], Tuple[str, ...]] = {
+    # embeddings / head
+    ("emb", 2): ("vocab", "embed"),          # 2-D sharded: TP x FSDP
+    ("pos_emb", 2): ("pos", "embed"),
+    ("unembed", 2): ("embed", "vocab"),
+    # norms
+    ("scale", 1): ("embed_nofsdp",),
+    ("bias", 1): ("embed_nofsdp",),
+    # attention
+    ("wq", 2): ("embed", "qkv"),
+    ("wk", 2): ("embed", "qkv"),
+    ("wv", 2): ("embed", "qkv"),
+    ("wo", 2): ("qkv", "embed"),
+    ("w_r", 2): ("embed", "qkv"),        # XL relative-position projection
+    ("u_bias", 2): ("heads", None),
+    ("v_bias", 2): ("heads", None),
+    ("q_scale", 1): (None,),
+    ("k_scale", 1): (None,),
+    # dense/glu ffn
+    ("w1", 2): ("embed", "ffn"),
+    ("w2", 2): ("ffn", "embed"),
+    ("w3", 2): ("embed", "ffn"),
+    # moe (rank-3 experts; EP owns the model axis, expert_ff stays local)
+    ("we1", 3): ("experts", "embed", "expert_ff"),
+    ("we1g", 3): ("experts", "embed", "expert_ff"),
+    ("we2", 3): ("experts", "expert_ff", "embed"),
+    # shared experts: n=1 so the experts axis drops; shard their ffn over model
+    ("shared_w1", 3): ("experts", "embed", "ffn"),
+    ("shared_w1g", 3): ("experts", "embed", "ffn"),
+    ("shared_w2", 3): ("experts", "ffn", "embed"),
+    ("router", 2): ("embed", None),
+    ("router_noise", 2): ("embed", None),
+    # pkm
+    ("keys_a", 3): ("heads", "embed", "pkm_keys"),
+    ("keys_b", 3): ("heads", "embed", "pkm_keys"),
+    ("values", 2): ("pkm_values", "embed"),
+    # mamba2 / ssd
+    ("in_proj", 2): ("embed", "ssm_inner"),
+    ("out_proj", 2): ("ssm_inner", "embed"),
+    ("conv_w", 2): ("ssm_inner", "conv"),
+    ("conv_b", 1): ("ssm_inner",),
+    ("A_log", 1): ("ssm_inner",),
+    ("D", 1): ("ssm_inner",),
+    ("dt_bias", 1): ("ssm_inner",),
+    # KV / SSM caches (serving state)
+    ("k", 4): ("batch", "kv_seq", "kv_heads", None),
+    ("v", 4): ("batch", "kv_seq", "kv_heads", None),
+    ("state", 4): ("batch", "heads", None, None),
+    ("conv", 3): ("batch", None, "ssm_inner"),
+    # batch inputs
+    ("tokens", 2): ("batch", None),
+    ("token", 1): ("batch",),
+    ("patches", 3): ("batch", None, None),
+    ("frames", 3): ("batch", None, None),
+}
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], rules: LogicalRules,
+                  mesh: Optional[Mesh]) -> P:
+    """Logical axes tuple -> PartitionSpec, dropping mesh axes that don't exist."""
+    names = set(mesh.axis_names) if mesh is not None else set()
+    out = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            out.append(None)
+        elif isinstance(m, tuple):
+            kept = tuple(a for a in m if a in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(m if m in names else None)
+    return P(*out)
+
+
+def _leaf_axes(name: str, rank: int) -> Tuple[Optional[str], ...]:
+    if (name, rank) in PARAM_AXES:
+        return PARAM_AXES[(name, rank)]
+    if (name, rank - 1) in PARAM_AXES:                 # scan-stacked: leading layers
+        return ("layers",) + PARAM_AXES[(name, rank - 1)]
+    if (name, rank - 2) in PARAM_AXES:                 # doubly stacked (superblocks)
+        return ("layers", "layers") + PARAM_AXES[(name, rank - 2)]
+    return (None,) * rank                              # replicate unknown leaves
+
+
+def spec_for(path, leaf, rules: LogicalRules, mesh: Optional[Mesh]) -> P:
+    name = None
+    for entry in reversed(path):
+        key = getattr(entry, "key", None) or getattr(entry, "name", None)
+        if isinstance(key, str):
+            name = key
+            break
+    rank = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    axes = _leaf_axes(name or "", rank)
+    spec = spec_for_axes(axes, rules, mesh)
+    # jax.Array inputs require evenly divisible shardings: drop (replicate) any axis
+    # that does not divide its dimension (e.g. whisper's vocab 51865 over 16-way TP,
+    # 8 KV heads over 16-way TP). GSPMD-internal constraints may still pad; inputs
+    # cannot.
+    shape = getattr(leaf, "shape", None)
+    if shape is not None and mesh is not None:
+        fixed = []
+        for dim, ax in zip(shape, tuple(spec) + (None,) * (rank - len(spec))):
+            if ax is None:
+                fixed.append(None)
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            fixed.append(ax if dim % size == 0 else None)
+        spec = P(*fixed)
+    return spec
+
+
+def tree_shardings(tree, mesh: Mesh, rules: LogicalRules):
+    """Pytree of NamedShardings matching `tree` (arrays or ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for(path, leaf, rules, mesh)),
+        tree)
+
+
+def tree_specs(tree, rules: LogicalRules, mesh: Optional[Mesh]):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(path, leaf, rules, mesh), tree)
+
+
+def logical_sharding(axes: Tuple[Optional[str], ...], rules: LogicalRules,
+                     mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for_axes(axes, rules, mesh))
+
+
+def with_logical_constraint(x: jax.Array, axes: Tuple[Optional[str], ...],
+                            rules: LogicalRules = TRAIN_RULES) -> jax.Array:
+    """Sharding-constrain an activation by logical axes; no-op without a mesh."""
+    sh = logical_sharding(axes, rules)
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,13 @@
+import os
+
+# Tests see the single real CPU device (the dry-run sets its own flags in a
+# subprocess). Keep allocations small and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,101 @@
+"""PKM + Top-K activation tests, including the paper's key structural guarantee and
+hypothesis property tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FFNConfig
+from repro.core import apply_dense, apply_pkm, init_dense, init_pkm, pkm_full_scores
+
+D = 32
+
+
+def test_topk_masks_to_k_nonzeros():
+    cfg = FFNConfig(kind="topk", d_ff=64, topk_k=8, activation="relu")
+    p = init_dense(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+    u = jax.nn.relu(x @ p["w1"])
+    kth = jax.lax.top_k(u, 8)[0][..., -1:]
+    kept = (u >= kth) & (u > 0)
+    # the masked activation keeps at most K entries per token
+    assert int(kept.sum(-1).max()) <= 8
+
+
+def test_topk_equals_dense_when_k_is_dff():
+    cfg_t = FFNConfig(kind="topk", d_ff=64, topk_k=64, activation="relu")
+    cfg_d = FFNConfig(kind="dense", d_ff=64, activation="relu")
+    p = init_dense(jax.random.PRNGKey(0), D, cfg_d, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+    yt, _ = apply_dense(p, x, cfg_t)
+    yd, _ = apply_dense(p, x, cfg_d)
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(yd), atol=1e-6)
+
+
+def _pkm(ns=8, knn=4, heads=2, relu=True):
+    cfg = FFNConfig(kind="pkm", n_subkeys=ns, pkm_heads=heads, pkm_knn=knn,
+                    activation="relu" if relu else "softmax")
+    p = init_pkm(jax.random.PRNGKey(0), D, cfg, 2)
+    return cfg, p
+
+
+def test_pkm_topk_superset_guarantee():
+    """Paper Sec. 3.2: top-K over the K^2 Cartesian candidates == true top-K of the
+    full u (the candidates provably contain the true top-K)."""
+    cfg, p = _pkm(ns=8, knn=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, D))
+    full = pkm_full_scores(p, x, cfg)                 # (N, H, ns^2)
+    true_top = jax.lax.top_k(full, cfg.pkm_knn)[0]
+
+    xa, xb = jnp.split(x, 2, -1)
+    ua = jnp.einsum("nd,hds->nhs", xa, p["keys_a"])
+    ub = jnp.einsum("nd,hds->nhs", xb, p["keys_b"])
+    va, _ = jax.lax.top_k(ua, cfg.pkm_knn)
+    vb, _ = jax.lax.top_k(ub, cfg.pkm_knn)
+    cand = (va[..., :, None] + vb[..., None, :]).reshape(32, cfg.pkm_heads, -1)
+    cand_top = jax.lax.top_k(cand, cfg.pkm_knn)[0]
+    np.testing.assert_allclose(np.asarray(cand_top), np.asarray(true_top),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_pkm_superset_property(ns, knn, seed):
+    """Hypothesis: for random sub-key scores, Cartesian top-K == full top-K."""
+    knn = min(knn, ns)
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    ua = jax.random.normal(ka, (ns,))
+    ub = jax.random.normal(kb, (ns,))
+    full = (ub[:, None] + ua[None, :]).reshape(-1)
+    true_top = np.sort(np.asarray(jax.lax.top_k(full, knn)[0]))[::-1]
+    va = jax.lax.top_k(ua, knn)[0]
+    vb = jax.lax.top_k(ub, knn)[0]
+    cand = (va[:, None] + vb[None, :]).reshape(-1)
+    cand_top = np.sort(np.asarray(jax.lax.top_k(cand, knn)[0]))[::-1]
+    np.testing.assert_allclose(cand_top, true_top, atol=1e-6)
+
+
+def test_pkm_forward_shapes_and_grads():
+    for relu in (True, False):
+        cfg, p = _pkm(relu=relu)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 6, D))
+        y, _ = apply_pkm(p, x, cfg)
+        assert y.shape == x.shape
+        g = jax.grad(lambda p: apply_pkm(p, x, cfg)[0].sum())(p)
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_pkm_relu_sparser_output_than_softmax():
+    """ReLU zeroes negative candidate scores; softmax never does."""
+    cfg_r, p = _pkm(relu=True)
+    cfg_s = dataclasses.replace(cfg_r, activation="softmax")
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, D)) * 0.01  # small scores
+    yr, _ = apply_pkm(p, x, cfg_r)
+    ys, _ = apply_pkm(p, x, cfg_s)
+    # with tiny inputs ReLU output is ~0 while softmax mixes values regardless
+    assert float(jnp.abs(yr).mean()) < float(jnp.abs(ys).mean())
