@@ -6,6 +6,7 @@ The paper measures its Triton kernel on an RTX 3090; here we measure the JAX lay
 RELATIVE cost MoE/dense and its scaling in d_model, plus parameter bytes touched.
 """
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -13,10 +14,16 @@ import jax.numpy as jnp
 from repro.configs import moe_ffn
 from repro.configs.base import FFNConfig
 from repro.core import apply_dense, apply_moe, init_dense, init_moe
+from repro.kernels import ops as kops
 
 from .common import csv_row, time_layer
 
 TOKENS = 2048          # |B| scaled down from the paper's 32768 for CPU
+
+# The fused-CVMM row runs the pallas kernels, which off-TPU execute in
+# interpret mode — meaningful but slow, so it is measured at the smallest
+# d_model only (always on TPU; opt in everywhere with REPRO_BENCH_FUSED=1).
+_FUSED_ALWAYS = os.environ.get("REPRO_BENCH_FUSED", "") not in ("", "0")
 
 
 def run():
@@ -49,6 +56,18 @@ def run():
         rows.append(csv_row(
             f"fig2/moe_einsum_d{d_model}", us_e,
             f"active_param_bytes={active_bytes};ratio_vs_dense={us_e/us_d:.2f}"))
+
+        if jax.default_backend() == "tpu" or _FUSED_ALWAYS or d_model == 128:
+            kops.set_default_impl("pallas_fused")
+            try:
+                us_f = time_layer(lambda p, x: apply_moe(p, x, mcfg), mp, x,
+                                  iters=3)
+            finally:
+                kops.set_default_impl(None)
+            rows.append(csv_row(
+                f"fig2/moe_sort_fused_d{d_model}", us_f,
+                f"active_param_bytes={active_bytes};"
+                f"ratio_vs_sort={us_f/us_m:.2f}"))
     return rows
 
 

@@ -1,6 +1,8 @@
-"""Benchmark aggregator -- one module per paper table/figure.
+"""Benchmark aggregator -- one module per paper table/figure, plus the CVMM
+hot-path micro-benchmark (bench_cvmm -> BENCH_cvmm.json).
 
     PYTHONPATH=src python -m benchmarks.run [--steps N] [--only tableX]
+    PYTHONPATH=src python -m benchmarks.run --quick    # smoke: cvmm + fig2
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark.
 """
@@ -8,16 +10,23 @@ import argparse
 import sys
 import time
 
+QUICK = ("cvmm", "fig2")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="fast smoke subset (%s) with reduced iters" %
+                         ",".join(QUICK))
     args = ap.parse_args()
 
-    from . import (fig1_active_channels, fig2_exec_time, fig3_expert_usage,
-                   table1_topk, table2_pkm, table3_sigma_moe, table4_ablations)
+    from . import (bench_cvmm, fig1_active_channels, fig2_exec_time,
+                   fig3_expert_usage, table1_topk, table2_pkm,
+                   table3_sigma_moe, table4_ablations)
     mods = {
+        "cvmm": lambda: bench_cvmm.run(iters=3 if args.quick else 10),
         "table1": lambda: table1_topk.run(args.steps),
         "table2": lambda: table2_pkm.run(args.steps),
         "table3": lambda: table3_sigma_moe.run(max(args.steps, 150)),
@@ -30,6 +39,8 @@ def main() -> None:
     failures = 0
     for name, fn in mods.items():
         if args.only and name != args.only:
+            continue
+        if args.quick and name not in QUICK:
             continue
         t0 = time.time()
         try:

@@ -29,6 +29,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:                                   # jax >= 0.6
+    _shard_map = jax.shard_map
+except AttributeError:                 # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from ..common import act_fn, cdiv, round_up
 from ..configs.base import FFNConfig
 from ..sharding.context import current_mesh
@@ -125,14 +130,50 @@ def _apply_sort(params: Dict, xf: jax.Array, cfg: FFNConfig, info: SelectionInfo
                 e: int) -> jax.Array:
     """Dropless grouped matmul: the TPU CVMM path.
 
-    1. flatten (token, k) pairs; 2. stable-argsort by expert id (the paper's CUDA
-    kernel does exactly this reordering); 3. grouped matmul where row-groups share an
-    expert matrix; 4. scatter-add results back per token, weighted by the gates.
+    All pallas variants build ONE ``CvmmPlan`` per call (the layout metadata is
+    shared by every kernel launch, forward and backward — kernels/ops.py).
+
+    "pallas_fused": the gather, the w1 activation/GLU epilogue and the w2 gate
+    multiply run inside the grouped-GEMM kernels; nothing between the routing
+    and the final scatter-add is materialized at the XLA level.
+
+    "pallas"/"ragged"/"ref": 1. flatten (token, k) pairs; 2. stable-argsort by
+    expert id (the paper's CUDA kernel does exactly this reordering); 3. grouped
+    matmul where row-groups share an expert matrix; 4. scatter-add results back
+    per token, weighted by the gates.
     """
     from ..kernels import ops as kops  # local import: kernels are optional at import
 
     n, d = xf.shape
     k = cfg.k
+    impl = kops.default_impl()
+
+    if impl.startswith("pallas"):
+        w1 = params["we1"].astype(xf.dtype)
+        w2 = params["we2"].astype(xf.dtype)
+        w1g = params["we1g"].astype(xf.dtype) if cfg.glu_experts else None
+        plan = kops.make_moe_plan(info.idx, info.gates, n, e)
+        if (impl.startswith("pallas_fused")
+                and kops.fused_supported(n, d, cfg.expert_size, cfg.activation,
+                                         xf.dtype, glu=cfg.glu_experts)):
+            return kops.moe_mlp_fused(
+                xf, plan, w1, w2, w1g, activation=cfg.activation,
+                interpret=True if impl.endswith("_interpret") else None)
+        # unfused pallas: gather/sort at the XLA level, plan reused by all
+        # three grouped GEMMs (and their backward) — no layout recompute.
+        interpret = kops._impl_interpret(impl)
+        src = jnp.repeat(jnp.arange(n), k)[plan.perm]     # sorted rows' tokens
+        x_sorted = xf[src]                                # (N*K, d) gathered rows
+        h = kops.cvmm_planned(x_sorted, plan, w1, interpret=interpret)
+        hg = (kops.cvmm_planned(x_sorted, plan, w1g, interpret=interpret)
+              if cfg.glu_experts else None)
+        u = _expert_ffn(cfg, h, hg)
+        y_sorted = kops.cvmm_planned(u, plan, w2, interpret=interpret)
+        g_flat = info.gates.reshape(-1)
+        y_sorted = y_sorted * g_flat[plan.perm][:, None].astype(y_sorted.dtype)
+        out = jnp.zeros_like(xf)
+        return out.at[src].add(y_sorted)
+
     e_flat = info.idx.reshape(-1)                         # (N*K,)
     g_flat = info.gates.reshape(-1)
     tok = jnp.repeat(jnp.arange(n), k)
@@ -268,7 +309,7 @@ def _apply_shard_map(params: Dict, xf: jax.Array, cfg: FFNConfig,
     w2 = params["we2"].astype(xf.dtype)
     w1g = (params["we1g"].astype(xf.dtype) if cfg.glu_experts
            else jnp.zeros((e, 1, 1), xf.dtype))
-    y, dropped = jax.shard_map(
+    y, dropped = _shard_map(
         local, mesh=mesh,
         in_specs=(tok_spec, tok_spec, tok_spec, w_spec, w_spec, w_spec),
         out_specs=(tok_spec, P()),

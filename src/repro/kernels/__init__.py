@@ -1,3 +1,3 @@
-from . import ops, ref
+from . import compat, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["compat", "ops", "ref"]

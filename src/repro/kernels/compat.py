@@ -1,0 +1,18 @@
+"""Pallas TPU API compatibility shims shared by the kernel modules.
+
+The TPU compiler-params class was renamed across JAX releases:
+``pltpu.TPUCompilerParams`` (jax 0.4.x) became ``pltpu.CompilerParams`` in
+later releases. Every ``pallas_call`` in this package goes through
+``tpu_compiler_params`` so the rename is absorbed in exactly one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(*, dimension_semantics):
+    """Build compiler params with per-grid-dim semantics on any JAX version."""
+    return _PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))

@@ -1,17 +1,43 @@
 """Pallas TPU kernels for CVMM — conditional (grouped) matmul, the paper's CUDA
 kernel adapted to the TPU memory hierarchy (DESIGN.md Sec. 4).
 
-Layout contract (established by ops.py): rows are sorted by expert and each expert's
-row-range is padded to a multiple of the row tile TM, so **every (TM, K) row tile
-belongs to exactly one expert**. A scalar-prefetch array ``tile_expert`` maps row-tile
-index -> expert id; BlockSpec index_maps use it to stream the right expert's weight
-block HBM->VMEM. This replaces the CUDA kernel's shared-memory reuse of the sorted
-expert matrix with Mosaic-scheduled DMA of one (K, TN) weight tile per grid step.
+Layout contract (established by ops.py, shared by every kernel here)
+--------------------------------------------------------------------
+Rows are sorted by expert and each expert's row-range is padded to a multiple of
+the row tile TM, so **every (TM, K) row tile belongs to exactly one expert**.
+ops.py computes this layout ONCE per MoE call into a ``CvmmPlan``:
 
-Forward:  out[t] = x[t] @ w[tile_expert[t]]          grid (m_tiles, n_tiles)
-dW:       dw[e]  = sum_{t: expert(t)=e} x[t]^T g[t]  grid (k_tiles, n_tiles, m_tiles)
-          (m innermost; tile_expert is non-decreasing, so output-block revisits are
-          consecutive and accumulation is legal on TPU.)
+  ``new_pos``     (M,)        tile-aligned slot of sorted row i
+  ``row_src``     (M_pad,)    source row in the *unsorted* activations for each
+                              padded slot; slack slots hold the sentinel N (one
+                              past the last row) so XLA-side scatters drop them
+  ``tile_expert`` (M_pad/TM,) row-tile index -> expert id (non-decreasing)
+  ``gate_tiles``  (M_pad/TM, TM) float32 gate per padded slot, 0 on slack
+
+``tile_expert`` is scalar-prefetched; BlockSpec index_maps use it to stream the
+right expert's weight block HBM->VMEM. This replaces the CUDA kernel's
+shared-memory reuse of the sorted expert matrix with Mosaic-scheduled DMA of one
+(K, TN) weight tile per grid step. The plan is threaded through forward AND
+backward via custom_vjp residuals, so backward never re-derives the layout.
+
+Unfused kernels (building blocks, also the backward pass of the fused path)
+  cvmm_pallas     out[t] = x[t] @ w[tile_expert[t]]        grid (m_tiles, n_tiles)
+  cvmm_dw_pallas  dw[e]  = sum_{t: expert(t)=e} x[t]^T g[t] grid (k, n, m); m
+                  innermost — tile_expert is non-decreasing, so output-block
+                  revisits are consecutive and accumulation is legal on TPU.
+
+Fused forward pipeline (one HBM round-trip per matmul, nothing else)
+  cvmm_fused_w1_pallas   gather + GEMM + activation(/GLU) epilogue. ``row_src``
+      is scalar-prefetched; on the first N-tile of each row tile the kernel
+      gathers the TM source rows of the *unsorted* activations (resident in
+      VMEM as a whole-array block) into a scratch tile via dynamic slices, then
+      reuses the scratch for the remaining N-tiles. With GLU both W1 and W1g
+      blocks are read in the same grid pass and u = act(x@w1) * (x@w1g) is
+      written directly — the materialized (N*K, d) gather, the x_pad scatter,
+      and the standalone activation pass all disappear.
+  cvmm_fused_w2_pallas   GEMM + per-row gate multiply in the epilogue, so
+      ``y_sorted * g_flat[perm]`` is never a separate XLA pass.
+
 dX reuses the forward kernel with w transposed.
 """
 from __future__ import annotations
@@ -23,9 +49,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import act_fn
+from .compat import tpu_compiler_params
+
 TM = 128            # row tile (MXU-aligned)
 LANE = 128          # lane multiple for K / N
 VMEM_BUDGET = 12 * 1024 * 1024
+
+# Activations that are elementwise (tile-local) and therefore legal to apply
+# inside a kernel epilogue on an (TM, TN) tile.
+FUSIBLE_ACTIVATIONS = ("relu", "gelu", "silu", "identity")
 
 
 def _pick_tn(k_pad: int, n_pad: int, bytes_per_el: int) -> int:
@@ -41,8 +74,29 @@ def _pick_tn(k_pad: int, n_pad: int, bytes_per_el: int) -> int:
     return 128
 
 
+def fused_w1_tn(n_rows: int, k_pad: int, g_pad: int, bytes_per_el: int,
+                n_weights: int, n_out: int):
+    """Largest fitting N tile for the gather-fused w1 kernel, or None.
+
+    Unlike ``_pick_tn`` this models the kernel's FULL working set — the
+    whole-array x block, the (TM, K) gather scratch, every weight tile and
+    every output tile (3 with GLU + save_preact) — and returns None rather
+    than silently under-tiling when nothing fits: callers must fall back to
+    the unfused path instead of compiling a kernel that exhausts VMEM."""
+    x_bytes = n_rows * k_pad * bytes_per_el
+    scratch = TM * k_pad * bytes_per_el
+    for tn in (512, 384, 256, 128):
+        if tn > g_pad or g_pad % tn:
+            continue
+        ws = (x_bytes + scratch + n_weights * k_pad * tn * bytes_per_el
+              + n_out * TM * tn * max(bytes_per_el, 4))
+        if ws <= VMEM_BUDGET:
+            return tn
+    return None
+
+
 # ---------------------------------------------------------------------------
-# Forward kernel
+# Forward kernel (unfused building block)
 # ---------------------------------------------------------------------------
 
 def _fwd_kernel(tile_expert_ref, x_ref, w_ref, o_ref):
@@ -74,7 +128,7 @@ def cvmm_pallas(x_pad: jax.Array, tile_expert: jax.Array, w: jax.Array,
             out_specs=pl.BlockSpec((TM, tn), lambda i, j, te: (i, j)),
         ),
         out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), x_pad.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(tile_expert, x_pad, w)
@@ -125,7 +179,162 @@ def cvmm_dw_pallas(x_pad: jax.Array, tile_expert: jax.Array, g_pad: jax.Array,
             out_specs=pl.BlockSpec((1, tk, tn), lambda k, n, m, te: (te[m], k, n)),
         ),
         out_shape=jax.ShapeDtypeStruct((n_experts, k_pad, n_pad), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(tile_expert, x_pad, g_pad)
+
+
+# ---------------------------------------------------------------------------
+# Fused forward kernels
+# ---------------------------------------------------------------------------
+
+def _gather_rows(i, row_src_ref, x_ref, xs_ref, n_rows: int):
+    """Gather the TM source rows of row tile ``i`` into VMEM scratch.
+
+    Runs on the first N-tile of each row tile only; the scratch persists across
+    the (sequential) inner grid dimension. Slack slots carry the sentinel
+    ``n_rows`` — clamped here, their (finite) outputs are killed by the zero
+    gate and the scatter-drop at the XLA level.
+    """
+    def body(r, _):
+        src = jnp.minimum(row_src_ref[i * TM + r], n_rows - 1)
+        xs_ref[pl.ds(r, 1), :] = x_ref[pl.ds(src, 1), :]
+        return 0
+
+    jax.lax.fori_loop(0, TM, body, 0)
+
+
+def _fused_w1_body(row_src_ref, x_ref, w1_ref, w1g_ref, o_u_ref, o_h_ref,
+                   o_hg_ref, xs_ref, *, act_name: str, n_rows: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        _gather_rows(i, row_src_ref, x_ref, xs_ref, n_rows)
+    h = jnp.dot(xs_ref[...], w1_ref[0], preferred_element_type=jnp.float32)
+    u = act_fn(act_name)(h)
+    if w1g_ref is not None:
+        hg = jnp.dot(xs_ref[...], w1g_ref[0],
+                     preferred_element_type=jnp.float32)
+        u = u * hg
+        if o_hg_ref is not None:
+            o_hg_ref[...] = hg.astype(o_hg_ref.dtype)
+    if o_h_ref is not None:
+        o_h_ref[...] = h.astype(o_h_ref.dtype)
+    o_u_ref[...] = u.astype(o_u_ref.dtype)
+
+
+def _k_w1(rs, te, x, w1, o_u, xs, **kw):
+    _fused_w1_body(rs, x, w1, None, o_u, None, None, xs, **kw)
+
+
+def _k_w1_save(rs, te, x, w1, o_u, o_h, xs, **kw):
+    _fused_w1_body(rs, x, w1, None, o_u, o_h, None, xs, **kw)
+
+
+def _k_w1_glu(rs, te, x, w1, w1g, o_u, xs, **kw):
+    _fused_w1_body(rs, x, w1, w1g, o_u, None, None, xs, **kw)
+
+
+def _k_w1_glu_save(rs, te, x, w1, w1g, o_u, o_h, o_hg, xs, **kw):
+    _fused_w1_body(rs, x, w1, w1g, o_u, o_h, o_hg, xs, **kw)
+
+
+def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
+                         tile_expert: jax.Array, w1: jax.Array,
+                         w1g: jax.Array | None, *, act_name: str,
+                         save_preact: bool = False,
+                         interpret: bool = False):
+    """Gather-fused grouped GEMM with activation(/GLU) epilogue.
+
+    x (N_rows, K_pad) — the UNSORTED activations, resident in VMEM as one
+    block; row_src (M_pad,) int32 maps padded slots to rows of x (sentinel
+    N_rows on slack); w1/w1g (E, K_pad, G_pad). Returns u (M_pad, G_pad) in the
+    tile-aligned sorted layout, already activated (and gated when w1g given).
+
+    ``save_preact=True`` (training: the custom_vjp forward rule) additionally
+    writes the pre-activations h (and hg with GLU) in the same grid pass, so
+    the backward pass needs no recompute GEMMs; returns (u, h[, hg])."""
+    n_rows, k_pad = x.shape
+    e, k_w, g_pad = w1.shape
+    m_pad = row_src.shape[0]
+    assert k_w == k_pad and m_pad % TM == 0
+    assert k_pad % LANE == 0 and g_pad % LANE == 0 and n_rows % 8 == 0
+    n_weights = 2 if w1g is not None else 1
+    n_out = (1 + n_weights) if save_preact else 1
+    tn = fused_w1_tn(n_rows, k_pad, g_pad, x.dtype.itemsize, n_weights, n_out)
+    if tn is None:
+        raise ValueError(
+            f"fused w1 working set exceeds VMEM budget for x ({n_rows}, "
+            f"{k_pad}); gate calls with ops.fused_supported")
+    grid = (m_pad // TM, g_pad // tn)
+
+    w_spec = pl.BlockSpec((1, k_pad, tn), lambda i, j, rs, te: (te[i], 0, j))
+    o_spec = pl.BlockSpec((TM, tn), lambda i, j, rs, te: (i, j))
+    o_shape = jax.ShapeDtypeStruct((m_pad, g_pad), x.dtype)
+    in_specs = [pl.BlockSpec((n_rows, k_pad), lambda i, j, rs, te: (0, 0)),
+                w_spec]
+    operands = [row_src, tile_expert, x, w1]
+    if w1g is not None:
+        in_specs.append(w_spec)
+        operands.append(w1g)
+        kernel = _k_w1_glu_save if save_preact else _k_w1_glu
+    else:
+        kernel = _k_w1_save if save_preact else _k_w1
+    kernel = functools.partial(kernel, act_name=act_name, n_rows=n_rows)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[o_spec] * n_out,
+            scratch_shapes=[pltpu.VMEM((TM, k_pad), x.dtype)],
+        ),
+        out_shape=[o_shape] * n_out,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+    return out[0] if n_out == 1 else tuple(out)
+
+
+def _fused_w2_kernel(tile_expert_ref, u_ref, w2_ref, gate_ref, o_ref):
+    acc = jnp.dot(u_ref[...], w2_ref[0], preferred_element_type=jnp.float32)
+    o_ref[...] = (acc * gate_ref[0][:, None]).astype(o_ref.dtype)
+
+
+def cvmm_fused_w2_pallas(u_pad: jax.Array, tile_expert: jax.Array,
+                         w2: jax.Array, gate_tiles: jax.Array,
+                         *, interpret: bool = False) -> jax.Array:
+    """Grouped GEMM with the per-row gate multiply fused into the epilogue.
+
+    u_pad (M_pad, G_pad) tile-aligned; w2 (E, G_pad, N_pad);
+    gate_tiles (M_pad//TM, TM) float32. Returns (M_pad, N_pad)."""
+    m_pad, g_pad = u_pad.shape
+    e, g_w, n_pad = w2.shape
+    assert g_w == g_pad and m_pad % TM == 0
+    assert g_pad % LANE == 0 and n_pad % LANE == 0
+    assert gate_tiles.shape == (m_pad // TM, TM)
+    tn = _pick_tn(g_pad, n_pad, u_pad.dtype.itemsize)
+    grid = (m_pad // TM, n_pad // tn)
+
+    return pl.pallas_call(
+        _fused_w2_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((TM, g_pad), lambda i, j, te: (i, 0)),
+                pl.BlockSpec((1, g_pad, tn), lambda i, j, te: (te[i], 0, j)),
+                pl.BlockSpec((1, TM), lambda i, j, te: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((TM, tn), lambda i, j, te: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), u_pad.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(tile_expert, u_pad, w2, gate_tiles)

@@ -1,29 +1,47 @@
-"""jit-ready CVMM wrapper: layout transformation + backend dispatch + custom_vjp.
+"""jit-ready CVMM wrapper: layout plan + backend dispatch + custom_vjp.
 
 Backends
 --------
-"pallas"   The TPU kernel (cvmm.py). On CPU it runs in interpret mode (the kernel body
-           executes in Python) — used by the test suite to validate the kernel logic.
-"ragged"   jax.lax.ragged_dot — XLA's grouped matmul; differentiable; the default on
-           CPU and a correctness cross-check on TPU.
-"ref"      Pure-jnp one-hot oracle (kernels/ref.py), O(N*E) — tests only.
+"pallas"        The TPU kernels (cvmm.py), unfused: rows are gathered/sorted at
+                the XLA level, each grouped GEMM is one pallas_call. On CPU the
+                kernels run in interpret mode — used by the tests.
+"pallas_fused"  The fused pipeline: one ``CvmmPlan`` computed per MoE call, a
+                gather-fused w1 kernel with activation/GLU epilogue and a w2
+                kernel with the gate multiply fused in. The plan is threaded
+                through forward and backward via custom_vjp residuals — no
+                layout recompute, no re-pad in backward. Exposed at the MoE-MLP
+                granularity via ``moe_mlp_fused``; for the bare ``cvmm`` API it
+                degrades to the planned unfused path (a single GEMM has no
+                epilogue to fuse).
+"ragged"        jax.lax.ragged_dot — XLA's grouped matmul; differentiable; the
+                default on CPU and a correctness cross-check on TPU.
+"ref"           Pure-jnp one-hot oracle (kernels/ref.py), O(N*E) — tests only.
 
 The public ``cvmm(x, group_sizes, w)`` takes rows already *sorted by expert*
 (group_sizes sums to rows) and returns x[i] @ w[expert(i)].
+
+Layout plan
+-----------
+``CvmmPlan`` (see kernels/cvmm.py for the field contract) is computed ONCE per
+MoE call by ``make_moe_plan`` and reused by every kernel launch of that call,
+forward and backward. ``_tile_layout`` is the single source of the tile-aligned
+layout math; nothing recomputes it downstream of a plan.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import dtypes
 
-from ..common import round_up
+from ..common import act_fn, round_up
 from . import ref as refk
-from .cvmm import TM, LANE, cvmm_dw_pallas, cvmm_pallas
+from .cvmm import (FUSIBLE_ACTIVATIONS, LANE, TM, cvmm_dw_pallas,
+                   cvmm_fused_w1_pallas, cvmm_fused_w2_pallas, cvmm_pallas,
+                   fused_w1_tn)
 
 _FORCED_IMPL: Optional[str] = None
 
@@ -36,12 +54,35 @@ def set_default_impl(impl: Optional[str]) -> None:
 def default_impl() -> str:
     if _FORCED_IMPL:
         return _FORCED_IMPL
-    return "pallas" if jax.default_backend() == "tpu" else "ragged"
+    return "pallas_fused" if jax.default_backend() == "tpu" else "ragged"
+
+
+def _impl_interpret(impl: str) -> bool:
+    return impl.endswith("_interpret") or jax.default_backend() != "tpu"
 
 
 # ---------------------------------------------------------------------------
-# Tile-aligned layout (megablocks-style)
+# Tile-aligned layout plan (megablocks-style)
 # ---------------------------------------------------------------------------
+
+class CvmmPlan(NamedTuple):
+    """One-per-MoE-call layout metadata shared by all kernel launches.
+
+    Field contract documented in kernels/cvmm.py. ``m_pad`` is static:
+    ``tile_expert.shape[0] * TM``. All int fields get float0 cotangents;
+    ``gate_tiles`` is the one differentiable leaf (grads flow back to routing).
+    """
+    perm: jax.Array          # (N*K,) argsort of flat expert ids (stable)
+    group_sizes: jax.Array   # (E,) rows per expert
+    new_pos: jax.Array       # (N*K,) tile-aligned slot of sorted row i
+    row_src: jax.Array       # (M_pad,) source token row; sentinel N on slack
+    tile_expert: jax.Array   # (M_pad//TM,) row-tile -> expert id
+    gate_tiles: jax.Array    # (M_pad//TM, TM) float32 gate per slot, 0 on slack
+
+    @property
+    def m_pad(self) -> int:
+        return self.tile_expert.shape[0] * TM
+
 
 def _tile_layout(group_sizes: jax.Array, m: int, e: int):
     """Map sorted rows to a layout where each expert's range is TM-aligned.
@@ -65,6 +106,32 @@ def _tile_layout(group_sizes: jax.Array, m: int, e: int):
     return new_pos, tile_expert, m_pad
 
 
+def make_moe_plan(idx: jax.Array, gates: jax.Array, n_tokens: int,
+                  n_experts: int) -> CvmmPlan:
+    """Build the CvmmPlan for one MoE call from the routing selection.
+
+    idx (N, K) int expert ids, gates (N, K) gate values. Differentiable in
+    ``gates`` (the scatter into ``gate_tiles`` is transparent to autodiff)."""
+    k = idx.shape[-1]
+    e_flat = idx.reshape(-1).astype(jnp.int32)
+    g_flat = gates.reshape(-1)
+    tok = jnp.repeat(jnp.arange(n_tokens, dtype=jnp.int32), k)
+    perm = jnp.argsort(e_flat, stable=True)
+    group_sizes = jnp.bincount(e_flat, length=n_experts).astype(jnp.int32)
+    new_pos, tile_expert, m_pad = _tile_layout(group_sizes, e_flat.shape[0],
+                                               n_experts)
+    row_src = jnp.full((m_pad,), n_tokens, jnp.int32).at[new_pos].set(tok[perm])
+    gate_pad = jnp.zeros((m_pad,), jnp.float32).at[new_pos].set(
+        g_flat[perm].astype(jnp.float32))
+    return CvmmPlan(perm=perm, group_sizes=group_sizes, new_pos=new_pos,
+                    row_src=row_src, tile_expert=tile_expert,
+                    gate_tiles=gate_pad.reshape(m_pad // TM, TM))
+
+
+def _float0(a: jax.Array):
+    return np.zeros(a.shape, dtypes.float0)
+
+
 def _pad_lane(a: jax.Array, axis: int) -> jax.Array:
     size = a.shape[axis]
     pad = round_up(size, LANE) - size
@@ -75,52 +142,200 @@ def _pad_lane(a: jax.Array, axis: int) -> jax.Array:
     return jnp.pad(a, widths)
 
 
+def _pad_w(w: jax.Array) -> jax.Array:
+    return _pad_lane(_pad_lane(w, 1), 2)
+
+
+def _mask_empty(dw: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    # Blocks of experts with zero rows are never visited by the dW kernel
+    # (their padded group has no tiles) and stay uninitialized.
+    return jnp.where((group_sizes > 0)[:, None, None], dw, 0.0)
+
+
 # ---------------------------------------------------------------------------
-# Pallas path with custom_vjp
+# Unfused pallas path with plan-threaded custom_vjp
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def _cvmm_pallas_vjp(x, group_sizes, w, interpret):
-    return _pallas_fwd_impl(x, group_sizes, w, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _cvmm_planned(x, new_pos, tile_expert, group_sizes, w, interpret):
+    return _planned_fwd(x, new_pos, tile_expert, group_sizes, w, interpret)[0]
 
 
-def _pallas_fwd_impl(x, group_sizes, w, interpret):
-    m, k = x.shape
-    e, _, n = w.shape
-    new_pos, tile_expert, m_pad = _tile_layout(group_sizes, m, e)
-    x_pad = jnp.zeros((m_pad, round_up(k, LANE)), x.dtype)
+def _planned_fwd(x, new_pos, tile_expert, group_sizes, w, interpret):
+    n = w.shape[2]
+    m_pad = tile_expert.shape[0] * TM
+    x_pad = jnp.zeros((m_pad, round_up(x.shape[1], LANE)), x.dtype)
     x_pad = x_pad.at[new_pos].set(_pad_lane(x, 1))
-    w_pad = _pad_lane(_pad_lane(w, 1), 2)
-    out_pad = cvmm_pallas(x_pad, tile_expert, w_pad, interpret=interpret)
-    return out_pad[new_pos, :n]
+    out_pad = cvmm_pallas(x_pad, tile_expert, _pad_w(w), interpret=interpret)
+    # Residuals carry the plan arrays AND the padded activations: backward does
+    # zero layout recompute and pads only the incoming cotangent.
+    return out_pad[new_pos, :n], (x_pad, new_pos, tile_expert, group_sizes, w)
 
 
-def _pallas_fwd(x, group_sizes, w, interpret):
-    return _pallas_fwd_impl(x, group_sizes, w, interpret), (x, group_sizes, w)
-
-
-def _pallas_bwd(interpret, res, g):
-    x, group_sizes, w = res
-    m, k = x.shape
-    e, _, n = w.shape
-    # dX: same grouped matmul against w^T.
-    dx = _pallas_fwd_impl(g, group_sizes, jnp.swapaxes(w, 1, 2), interpret)
-    # dW: grouped outer-product accumulation kernel on the tile-aligned layout.
-    new_pos, tile_expert, m_pad = _tile_layout(group_sizes, m, e)
-    x_pad = jnp.zeros((m_pad, round_up(k, LANE)), x.dtype)
-    x_pad = x_pad.at[new_pos].set(_pad_lane(x, 1))
+def _planned_bwd(interpret, res, g):
+    x_pad, new_pos, tile_expert, group_sizes, w = res
+    e, k, n = w.shape
+    m_pad = x_pad.shape[0]
     g_pad = jnp.zeros((m_pad, round_up(n, LANE)), g.dtype)
     g_pad = g_pad.at[new_pos].set(_pad_lane(g, 1))
+    w_pad = _pad_w(w)
+    dx_pad = cvmm_pallas(g_pad, tile_expert, jnp.swapaxes(w_pad, 1, 2),
+                         interpret=interpret)
+    dx = dx_pad[new_pos, :k].astype(x_pad.dtype)
     dw = cvmm_dw_pallas(x_pad, tile_expert, g_pad, e, interpret=interpret)
-    # Blocks of experts with zero rows are never visited by the kernel (their padded
-    # group has no tiles) and stay uninitialized -- mask them to zero explicitly.
-    dw = jnp.where((group_sizes > 0)[:, None, None], dw, 0.0)
-    dw = dw[:, :k, :n].astype(w.dtype)
-    d_gs = np.zeros(group_sizes.shape, dtypes.float0)
-    return dx.astype(x.dtype), d_gs, dw
+    dw = _mask_empty(dw, group_sizes)[:, :k, :n].astype(w.dtype)
+    return (dx, _float0(new_pos), _float0(tile_expert), _float0(group_sizes),
+            dw)
 
 
-_cvmm_pallas_vjp.defvjp(_pallas_fwd, _pallas_bwd)
+_cvmm_planned.defvjp(_planned_fwd, _planned_bwd)
+
+
+def cvmm_planned(x: jax.Array, plan: CvmmPlan, w: jax.Array,
+                 *, interpret: bool) -> jax.Array:
+    """Grouped matmul on *sorted* rows reusing a precomputed plan (no layout
+    derivation inside — three calls in an MoE layer share one plan)."""
+    return _cvmm_planned(x, plan.new_pos, plan.tile_expert, plan.group_sizes,
+                         w.astype(x.dtype), interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused MoE-MLP pipeline (gather -> grouped GEMM -> epilogue)
+# ---------------------------------------------------------------------------
+
+def fused_supported(n_tokens: int, d_model: int, expert_size: int,
+                    activation: str, dtype=jnp.float32,
+                    glu: bool = False) -> bool:
+    """The gather-fused w1 kernel keeps the whole activation matrix resident in
+    VMEM; bail out (callers fall back to the unfused path) when its full
+    working set would not fit at any tile size, or when the activation is not
+    tile-local. Sized for the worst case (training: save_preact outputs)."""
+    if activation not in FUSIBLE_ACTIVATIONS:
+        return False
+    n_weights = 2 if glu else 1
+    return fused_w1_tn(round_up(n_tokens, 8), round_up(d_model, LANE),
+                       round_up(expert_size, LANE), jnp.dtype(dtype).itemsize,
+                       n_weights, n_out=1 + n_weights) is not None
+
+
+def _fused_fwd_impl(static, xf, plan, w1, w1g, w2, save_preact=False):
+    act_name, interpret = static
+    n, d = xf.shape
+    xe = _pad_lane(xf, 1)
+    row_pad = round_up(n, 8) - n
+    if row_pad:
+        xe = jnp.pad(xe, ((0, row_pad), (0, 0)))
+    w1_out = cvmm_fused_w1_pallas(
+        xe, plan.row_src, plan.tile_expert, _pad_w(w1),
+        _pad_w(w1g) if w1g is not None else None,
+        act_name=act_name, save_preact=save_preact, interpret=interpret)
+    u_pad = w1_out[0] if save_preact else w1_out
+    y_pad = cvmm_fused_w2_pallas(u_pad, plan.tile_expert, _pad_w(w2),
+                                 plan.gate_tiles, interpret=interpret)
+    # row_src slack slots hold the sentinel n — out of bounds, dropped here.
+    y = jnp.zeros((n, d), y_pad.dtype).at[plan.row_src].add(
+        y_pad[:, :d], mode="drop")
+    return y, xe, w1_out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _moe_mlp_fused(static, xf, plan, w1, w1g, w2):
+    return _fused_fwd_impl(static, xf, plan, w1, w1g, w2)[0]
+
+
+def _fused_fwd(static, xf, plan, w1, w1g, w2):
+    # Under differentiation the w1 kernel also emits the pre-activations in the
+    # same grid pass (one extra HBM write each) so backward runs zero recompute
+    # GEMMs; the inference/primal path keeps the lean single-output kernel.
+    y, xe, w1_out = _fused_fwd_impl(static, xf, plan, w1, w1g, w2,
+                                    save_preact=True)
+    preact = w1_out[1:]                                   # (h,) or (h, hg)
+    return y, (xe, plan, w1, w1g, w2, preact, xf.shape)
+
+
+def _fused_bwd(static, res, dy):
+    act_name, interpret = static
+    xe, plan, w1, w1g, w2, preact, (n, d) = res
+    act = act_fn(act_name)
+    e, _, gsz = w1.shape
+    w1p, w2p = _pad_w(w1), _pad_w(w2)
+    w1gp = _pad_w(w1g) if w1g is not None else None
+    m_pad = plan.m_pad
+    gate = plan.gate_tiles.reshape(m_pad)[:, None]        # (M_pad, 1) f32
+
+    # The single layout materialization of the backward pass: cotangent and
+    # activations into the tile-aligned layout (sentinel rows -> 0).
+    dy_pad = jnp.take(_pad_lane(dy, 1), plan.row_src, axis=0, mode="fill",
+                      fill_value=0)
+    x_pad = jnp.take(xe, plan.row_src, axis=0, mode="fill", fill_value=0)
+
+    t0 = cvmm_pallas(dy_pad, plan.tile_expert, jnp.swapaxes(w2p, 1, 2),
+                     interpret=interpret)                 # dy @ w2^T, no gate
+    if w1g is not None:
+        h, hg = preact
+        u, eltwise_vjp = jax.vjp(lambda a, b: act(a) * b, h, hg)
+    else:
+        (h,) = preact
+        u, eltwise_vjp = jax.vjp(act, h)
+
+    # d/dgate[r] = dy[r] . (u[r] @ w2[e]) == (dy[r] @ w2[e]^T) . u[r] = t0 . u
+    dgate = jnp.sum(t0.astype(jnp.float32) * u.astype(jnp.float32), axis=1)
+    du = (t0.astype(jnp.float32) * gate).astype(u.dtype)
+    if w1g is not None:
+        dh, dhg = eltwise_vjp(du)
+    else:
+        (dh,) = eltwise_vjp(du)
+
+    dyg_pad = (dy_pad.astype(jnp.float32) * gate).astype(dy_pad.dtype)
+    dw2 = _mask_empty(
+        cvmm_dw_pallas(u, plan.tile_expert, dyg_pad, e, interpret=interpret),
+        plan.group_sizes)[:, :gsz, :d].astype(w2.dtype)
+    dw1 = _mask_empty(
+        cvmm_dw_pallas(x_pad, plan.tile_expert, dh, e, interpret=interpret),
+        plan.group_sizes)[:, :d, :gsz].astype(w1.dtype)
+    dx_pad = cvmm_pallas(dh, plan.tile_expert, jnp.swapaxes(w1p, 1, 2),
+                         interpret=interpret)
+    if w1g is not None:
+        dw1g = _mask_empty(
+            cvmm_dw_pallas(x_pad, plan.tile_expert, dhg, e,
+                           interpret=interpret),
+            plan.group_sizes)[:, :d, :gsz].astype(w1g.dtype)
+        dx_pad = dx_pad + cvmm_pallas(dhg, plan.tile_expert,
+                                      jnp.swapaxes(w1gp, 1, 2),
+                                      interpret=interpret)
+    else:
+        dw1g = None
+
+    dxf = jnp.zeros((n, xe.shape[1]), dx_pad.dtype).at[plan.row_src].add(
+        dx_pad, mode="drop")[:, :d].astype(xe.dtype)
+    dplan = CvmmPlan(
+        perm=_float0(plan.perm), group_sizes=_float0(plan.group_sizes),
+        new_pos=_float0(plan.new_pos), row_src=_float0(plan.row_src),
+        tile_expert=_float0(plan.tile_expert),
+        gate_tiles=dgate.reshape(plan.gate_tiles.shape))
+    return dxf, dplan, dw1, dw1g, dw2
+
+
+_moe_mlp_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+def moe_mlp_fused(xf: jax.Array, plan: CvmmPlan, w1: jax.Array, w2: jax.Array,
+                  w1g: Optional[jax.Array] = None, *, activation: str = "relu",
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Fused dropless expert MLP: y[t] = gate * (act(x @ w1[e]) [* x @ w1g[e]]) @ w2[e].
+
+    xf (N, d) UNSORTED activations; the gather, activation/GLU and gate multiply
+    all run inside the two kernel launches (see kernels/cvmm.py). Returns the
+    per-(token, expert) outputs already scatter-added back to (N, d)."""
+    if activation not in FUSIBLE_ACTIVATIONS:
+        raise ValueError(f"activation {activation!r} is not tile-local; "
+                         f"fusible: {FUSIBLE_ACTIVATIONS}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    dt = xf.dtype
+    return _moe_mlp_fused((activation, interpret), xf, plan, w1.astype(dt),
+                          None if w1g is None else w1g.astype(dt),
+                          w2.astype(dt))
 
 
 # ---------------------------------------------------------------------------
@@ -137,9 +352,11 @@ def cvmm(x: jax.Array, group_sizes: jax.Array, w: jax.Array,
                                   group_sizes.astype(jnp.int32))
     if impl == "ref":
         return refk.cvmm_ref(x, group_sizes, w)
-    if impl == "pallas":
-        return _cvmm_pallas_vjp(x, group_sizes, w.astype(x.dtype),
-                                jax.default_backend() != "tpu")
-    if impl == "pallas_interpret":
-        return _cvmm_pallas_vjp(x, group_sizes, w.astype(x.dtype), True)
+    if impl in ("pallas", "pallas_interpret", "pallas_fused",
+                "pallas_fused_interpret"):
+        new_pos, tile_expert, _ = _tile_layout(group_sizes, x.shape[0],
+                                               w.shape[0])
+        return _cvmm_planned(x, new_pos, tile_expert,
+                             group_sizes.astype(jnp.int32), w.astype(x.dtype),
+                             _impl_interpret(impl))
     raise ValueError(f"unknown cvmm impl {impl}")

@@ -121,24 +121,31 @@ def main(argv=None) -> int:
         rng = jax.random.PRNGKey(args.seed + 1)
 
         t_start = time.time()
-        for step in range(start_step, args.steps):
-            if step == args.fail_at_step:
-                raise RuntimeError(f"injected failure at step {step}")
-            batch = {k: jnp.asarray(v) for k, v in it.next().items()}
-            mon.start()
-            state, metrics = step_fn(state, batch, rng)
-            if step % args.log_every == 0 or step == args.steps - 1:
-                loss = float(metrics["loss"])
-                dt = mon.stop(step)
-                print(f"step {step:5d} loss {loss:.4f} "
-                      f"lr {float(metrics['lr']):.2e} "
-                      f"gnorm {float(metrics['grad_norm']):.3f} {dt:.3f}s",
-                      flush=True)
-            else:
-                jax.block_until_ready(metrics["loss"])
-                mon.stop(step)
-            if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-                mgr.save(step + 1, state, extra={"data": it.state()})
+        try:
+            for step in range(start_step, args.steps):
+                if step == args.fail_at_step:
+                    raise RuntimeError(f"injected failure at step {step}")
+                batch = {k: jnp.asarray(v) for k, v in it.next().items()}
+                mon.start()
+                state, metrics = step_fn(state, batch, rng)
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    loss = float(metrics["loss"])
+                    dt = mon.stop(step)
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} {dt:.3f}s",
+                          flush=True)
+                else:
+                    jax.block_until_ready(metrics["loss"])
+                    mon.stop(step)
+                if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+                    mgr.save(step + 1, state, extra={"data": it.state()})
+        except BaseException:
+            # Preemption/crash path: an async save started before the failure
+            # must still commit, or "loses at most ckpt_every steps" is a lie —
+            # the daemon writer thread dies with the process mid-write.
+            mgr.wait()
+            raise
         mgr.save(args.steps, state, extra={"data": it.state()}, blocking=True)
         mgr.wait()
         total = time.time() - t_start

@@ -1,0 +1,242 @@
+"""Fused CVMM pipeline validation: the ``CvmmPlan`` layout object and the
+gather->grouped-GEMM->epilogue kernels (interpret mode on CPU) against the
+``ragged`` / pure-jnp oracles — forward, gradients, empty experts, E-padding,
+and the plan-reuse regression (backward must not re-derive the layout)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+# (N_tokens, d_model, E, expert_size G, K, n_valid_experts)
+# n_valid < E models EP-padding: experts >= n_valid are never routed to.
+CASES = [
+    (40, 24, 5, 16, 2, 5),
+    (64, 32, 4, 32, 2, 3),        # padded expert (idx never reaches expert 3)
+    (9, 8, 3, 8, 1, 2),           # tiny, under one tile, K=1
+    (150, 48, 6, 24, 4, 6),
+    (32, 16, 2, 16, 2, 1),        # all tokens on one expert, one empty
+]
+
+
+def _mk(case, dtype, seed=0):
+    n, d, e, g, k, e_valid = case
+    key = jax.random.PRNGKey(seed + n * 13 + d)
+    kx, ki, kg, k1, k2, k3 = jax.random.split(key, 6)
+    xf = jax.random.normal(kx, (n, d), jnp.float32).astype(dtype)
+    idx = jax.random.randint(ki, (n, k), 0, e_valid)
+    gates = jax.nn.softmax(jax.random.normal(kg, (n, k), jnp.float32), -1)
+    w1 = (0.3 * jax.random.normal(k1, (e, d, g), jnp.float32)).astype(dtype)
+    w1g = (0.3 * jax.random.normal(k2, (e, d, g), jnp.float32)).astype(dtype)
+    w2 = (0.3 * jax.random.normal(k3, (e, g, d), jnp.float32)).astype(dtype)
+    return xf, idx, gates, w1, w1g, w2
+
+
+def _oracle_mlp(xf, idx, gates, w1, w1g, w2, e, act):
+    """Unfused reference on the ragged-dot backend (differentiable)."""
+    n, k = idx.shape
+    e_flat = idx.reshape(-1)
+    g_flat = gates.reshape(-1)
+    tok = jnp.repeat(jnp.arange(n), k)
+    perm = jnp.argsort(e_flat, stable=True)
+    gs = jnp.bincount(e_flat, length=e).astype(jnp.int32)
+    xs = xf[tok[perm]]
+    h = jax.lax.ragged_dot(xs, w1.astype(xs.dtype), gs)
+    u = act(h)
+    if w1g is not None:
+        u = u * jax.lax.ragged_dot(xs, w1g.astype(xs.dtype), gs)
+    y = jax.lax.ragged_dot(u, w2.astype(u.dtype), gs)
+    y = y * g_flat[perm][:, None].astype(y.dtype)
+    return jnp.zeros_like(xf).at[tok[perm]].add(y)
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("glu", [False, True])
+def test_fused_forward_matches_ragged(case, dtype, glu):
+    n, d, e, g, k, _ = case
+    xf, idx, gates, w1, w1g, w2 = _mk(case, dtype)
+    if not glu:
+        w1g = None
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    got = ops.moe_mlp_fused(xf, plan, w1, w2, w1g, activation="relu",
+                            interpret=True)
+    want = _oracle_mlp(xf, idx, gates, w1, w1g, w2, e, jax.nn.relu)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("case", CASES[:3])
+@pytest.mark.parametrize("glu", [False, True])
+def test_fused_gradients_match_ragged(case, glu):
+    n, d, e, g, k, _ = case
+    xf, idx, gates, w1, w1g, w2 = _mk(case, jnp.float32)
+    if not glu:
+        w1g = None
+    act = lambda x: jax.nn.gelu(x, approximate=True)
+    probe = lambda y: jnp.sum(y * jnp.cos(jnp.arange(y.size).reshape(y.shape)))
+
+    def loss_fused(xf, gates, w1, w1g, w2):
+        plan = ops.make_moe_plan(idx, gates, n, e)
+        return probe(ops.moe_mlp_fused(xf, plan, w1, w2, w1g,
+                                       activation="gelu", interpret=True))
+
+    def loss_ref(xf, gates, w1, w1g, w2):
+        return probe(_oracle_mlp(xf, idx, gates, w1, w1g, w2, e, act))
+
+    if glu:
+        gf = jax.grad(loss_fused, argnums=(0, 1, 2, 3, 4))(xf, gates, w1, w1g, w2)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(xf, gates, w1, w1g, w2)
+        names = ("dx", "dgates", "dw1", "dw1g", "dw2")
+    else:
+        f2 = lambda fn: (lambda xf, gates, w1, w2: fn(xf, gates, w1, None, w2))
+        gf = jax.grad(f2(loss_fused), argnums=(0, 1, 2, 3))(xf, gates, w1, w2)
+        gr = jax.grad(f2(loss_ref), argnums=(0, 1, 2, 3))(xf, gates, w1, w2)
+        names = ("dx", "dgates", "dw1", "dw2")
+    for name, a, b in zip(names, gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4, err_msg=name)
+
+
+def test_fused_empty_expert_weight_grads_zero():
+    """Experts that receive no rows must get exactly-zero weight gradients."""
+    case = (64, 32, 4, 32, 2, 3)          # expert 3 never selected
+    n, d, e, g, k, _ = case
+    xf, idx, gates, w1, w1g, w2 = _mk(case, jnp.float32)
+
+    def loss(w1, w1g, w2):
+        plan = ops.make_moe_plan(idx, gates, n, e)
+        return ops.moe_mlp_fused(xf, plan, w1, w2, w1g, activation="relu",
+                                 interpret=True).sum()
+
+    d1, d1g, d2 = jax.grad(loss, argnums=(0, 1, 2))(w1, w1g, w2)
+    for dw in (d1, d1g, d2):
+        assert np.all(np.asarray(dw[3]) == 0)
+        assert np.any(np.asarray(dw[0]) != 0)
+
+
+def test_fused_bf16_gradients_finite_and_close():
+    case = (40, 24, 5, 16, 2, 5)
+    n, d, e, g, k, _ = case
+    xf, idx, gates, w1, w1g, w2 = _mk(case, jnp.bfloat16)
+
+    def loss(xf, w1, w2):
+        plan = ops.make_moe_plan(idx, gates, n, e)
+        y = ops.moe_mlp_fused(xf, plan, w1, w2, None, activation="relu",
+                              interpret=True)
+        return y.astype(jnp.float32).sum()
+
+    gx, g1, g2 = jax.grad(loss, argnums=(0, 1, 2))(xf, w1, w2)
+
+    def loss_ref(xf, w1, w2):
+        y = _oracle_mlp(xf, idx, gates, w1, None, w2, e, jax.nn.relu)
+        return y.astype(jnp.float32).sum()
+
+    rx, r1, r2 = jax.grad(loss_ref, argnums=(0, 1, 2))(xf, w1, w2)
+    for a, b in ((gx, rx), (g1, r1), (g2, r2)):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        assert np.isfinite(a).all()
+        np.testing.assert_allclose(a, b, atol=0.15, rtol=0.15)
+
+
+def test_plan_layout_consistency():
+    """row_src/gate_tiles/new_pos describe the same permutation."""
+    case = (100, 16, 6, 8, 3, 5)
+    n, d, e, g, k, _ = case
+    xf, idx, gates, w1, w1g, w2 = _mk(case, jnp.float32)
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    m = n * k
+    assert plan.row_src.shape[0] == plan.m_pad
+    assert plan.m_pad % ops.TM == 0
+    row_src = np.asarray(plan.row_src)
+    new_pos = np.asarray(plan.new_pos)
+    tok = np.repeat(np.arange(n), k)
+    perm = np.asarray(plan.perm)
+    # every sorted row's slot points back at its source token
+    assert (row_src[new_pos] == tok[perm]).all()
+    # slack slots hold the sentinel and a zero gate
+    gate_pad = np.asarray(plan.gate_tiles).reshape(-1)
+    slack = np.ones(plan.m_pad, bool)
+    slack[new_pos] = False
+    assert (row_src[slack] == n).all()
+    assert (gate_pad[slack] == 0).all()
+    # tiles are expert-pure: each valid slot's tile maps to its row's expert
+    te = np.asarray(plan.tile_expert)
+    e_sorted = np.asarray(idx.reshape(-1))[perm]
+    assert (te[new_pos // ops.TM] == e_sorted).all()
+
+
+def test_backward_reuses_forward_plan(monkeypatch):
+    """Regression: the backward pass must NOT re-derive the tile layout.
+
+    The seed implementation traced ``_tile_layout`` three times per grad call
+    (forward, dX, dW); the planned custom_vjp must trace it exactly once."""
+    calls = {"n": 0}
+    orig = ops._tile_layout
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(ops, "_tile_layout", counting)
+
+    m, k, n, e = 64, 32, 16, 4
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = 0.1 * jax.random.normal(key, (e, k, n), jnp.float32)
+    gs = jnp.array([10, 20, 30, 4])
+    jax.grad(lambda x, w: ops.cvmm(x, gs, w, impl="pallas_interpret").sum(),
+             argnums=(0, 1))(x, w)
+    assert calls["n"] == 1, f"_tile_layout traced {calls['n']}x (expected 1)"
+
+    # fused pipeline: one plan per MoE call, zero extra layout derivations
+    calls["n"] = 0
+    case = (40, 24, 5, 16, 2, 5)
+    xf, idx, gates, w1, w1g, w2 = _mk(case, jnp.float32)
+
+    def loss(xf, w1, w2):
+        plan = ops.make_moe_plan(idx, gates, 40, 5)
+        return ops.moe_mlp_fused(xf, plan, w1, w2, None, activation="relu",
+                                 interpret=True).sum()
+
+    jax.grad(loss, argnums=(0, 1, 2))(xf, w1, w2)
+    assert calls["n"] == 1, f"_tile_layout traced {calls['n']}x (expected 1)"
+
+
+def test_moe_sort_dispatch_uses_fused(monkeypatch):
+    """apply_moe(dispatch='sort') routes through the fused pipeline when the
+    default impl is pallas_fused, and matches the ragged-backed sort path."""
+    from repro.configs import moe_ffn
+    from repro.core import apply_moe, init_moe
+
+    d_model, ne, g, k = 32, 4, 16, 2
+    cfg = moe_ffn(ne, g, k, dispatch="sort")
+    p = init_moe(jax.random.PRNGKey(0), d_model, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 8, d_model), jnp.float32)
+
+    ops.set_default_impl("ragged")
+    try:
+        y_ref, _ = apply_moe(p, x, cfg)
+    finally:
+        ops.set_default_impl(None)
+
+    called = {"fused": 0}
+    orig = ops.moe_mlp_fused
+
+    def spy(*a, **kw):
+        called["fused"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(ops, "moe_mlp_fused", spy)
+    ops.set_default_impl("pallas_fused")
+    try:
+        y_fused, _ = apply_moe(p, x, cfg)
+    finally:
+        ops.set_default_impl(None)
+    assert called["fused"] == 1
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_ref),
+                               atol=2e-5, rtol=2e-5)
