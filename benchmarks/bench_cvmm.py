@@ -7,6 +7,18 @@ intermediates — the quantity the fused pipeline attacks (one layout plan, no
 gathered (N*K, d) copy, no separate activation / gate passes, no re-pad in
 backward).
 
+Two configs are measured:
+
+  base     one MoE layer's worth of tokens, small enough that interpret-mode
+           kernels finish in seconds on a single CPU core; fwd AND fwd+bwd.
+           Its ``fused_speedup_vs_pallas`` is the CI-gated signal (>= 1.0).
+  large_n  a token count PAST the retired whole-x VMEM residency boundary
+           (``cvmm.legacy_whole_x_rows``) — the regime the streamed
+           double-buffered row-DMA gather exists for; before the streaming
+           rewrite ``fused_supported`` rejected it and the fused path silently
+           fell back. Forward-only and fewer iters to keep the quick bench
+           fast; recorded under ``large_n`` in the JSON.
+
 On CPU the pallas kernels run in interpret mode, so absolute numbers are not
 TPU numbers; the comparison fused-vs-unfused and the bytes model are the
 tracked signals. Run:  PYTHONPATH=src python -m benchmarks.bench_cvmm [--out F]
@@ -16,38 +28,59 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.common import round_up
 from repro.kernels import ops
-from repro.kernels.cvmm import LANE, TM
+from repro.kernels.cvmm import LANE, TM, legacy_whole_x_rows
 
-# Bench scale: one MoE layer's worth of tokens, kept small enough that
-# interpret-mode kernels finish in seconds on a single CPU core.
-N_TOKENS = 256
-D_MODEL = 128
-N_EXPERTS = 4
-EXPERT_SIZE = 128
-K = 2
-GLU = True
 ITERS = 10
 
 
-def _setup(dtype=jnp.float32):
+class BenchConfig(NamedTuple):
+    n_tokens: int
+    d_model: int
+    n_experts: int
+    expert_size: int
+    k: int
+    glu: bool
+
+
+# Bench scale: one MoE layer's worth of tokens, kept small enough that
+# interpret-mode kernels finish in seconds on a single CPU core.
+BASE = BenchConfig(n_tokens=256, d_model=128, n_experts=4, expert_size=128,
+                   k=2, glu=True)
+
+
+def _large_n_config() -> BenchConfig:
+    """Smallest config past the retired whole-x VMEM boundary (fp32, no GLU,
+    K=1 to keep interpret-mode wall clock tolerable)."""
+    old = legacy_whole_x_rows(k_pad=128, bytes_per_el=4, n_weights=1, n_out=2)
+    return BenchConfig(n_tokens=old + TM, d_model=128, n_experts=4,
+                       expert_size=128, k=1, glu=False)
+
+
+def _setup(cfg: BenchConfig, dtype=jnp.float32):
     key = jax.random.PRNGKey(0)
     kx, ki, kg, k1, k2, k3 = jax.random.split(key, 6)
-    xf = jax.random.normal(kx, (N_TOKENS, D_MODEL), jnp.float32).astype(dtype)
-    idx = jax.random.randint(ki, (N_TOKENS, K), 0, N_EXPERTS)
-    gates = jax.nn.softmax(jax.random.normal(kg, (N_TOKENS, K), jnp.float32), -1)
-    w1 = (0.3 * jax.random.normal(k1, (N_EXPERTS, D_MODEL, EXPERT_SIZE))).astype(dtype)
-    w1g = (0.3 * jax.random.normal(k2, (N_EXPERTS, D_MODEL, EXPERT_SIZE))).astype(dtype)
-    w2 = (0.3 * jax.random.normal(k3, (N_EXPERTS, EXPERT_SIZE, D_MODEL))).astype(dtype)
+    xf = jax.random.normal(kx, (cfg.n_tokens, cfg.d_model),
+                           jnp.float32).astype(dtype)
+    idx = jax.random.randint(ki, (cfg.n_tokens, cfg.k), 0, cfg.n_experts)
+    gates = jax.nn.softmax(
+        jax.random.normal(kg, (cfg.n_tokens, cfg.k), jnp.float32), -1)
+    w1 = (0.3 * jax.random.normal(
+        k1, (cfg.n_experts, cfg.d_model, cfg.expert_size))).astype(dtype)
+    w1g = (0.3 * jax.random.normal(
+        k2, (cfg.n_experts, cfg.d_model, cfg.expert_size))).astype(dtype)
+    w2 = (0.3 * jax.random.normal(
+        k3, (cfg.n_experts, cfg.expert_size, cfg.d_model))).astype(dtype)
     return xf, idx, gates, w1, w1g, w2
 
 
-def _mlp(impl: str):
+def _mlp(impl: str, cfg: BenchConfig):
     """The sort-path expert MLP at a fixed routing, per impl — mirroring
     core/moe.py's dispatch exactly so the tracked fused-vs-unfused ratio
     compares against the REAL production unfused path (one shared plan via
@@ -55,29 +88,30 @@ def _mlp(impl: str):
     def f(xf, idx, gates, w1, w1g, w2):
         n = xf.shape[0]
         if impl.startswith("pallas"):
-            plan = ops.make_moe_plan(idx, gates, n, N_EXPERTS)
+            plan = ops.make_moe_plan(idx, gates, n, cfg.n_experts)
             if impl == "pallas_fused":
-                return ops.moe_mlp_fused(xf, plan, w1, w2, w1g if GLU else None,
+                return ops.moe_mlp_fused(xf, plan, w1, w2,
+                                         w1g if cfg.glu else None,
                                          activation="relu")
             interpret = ops._impl_interpret(impl)
-            src = jnp.repeat(jnp.arange(n), K)[plan.perm]
+            src = jnp.repeat(jnp.arange(n), cfg.k)[plan.perm]
             xs = xf[src]
             h = ops.cvmm_planned(xs, plan, w1, interpret=interpret)
             u = jax.nn.relu(h)
-            if GLU:
+            if cfg.glu:
                 u = u * ops.cvmm_planned(xs, plan, w1g, interpret=interpret)
             y = ops.cvmm_planned(u, plan, w2, interpret=interpret)
             y = y * gates.reshape(-1)[plan.perm][:, None].astype(y.dtype)
             return jnp.zeros_like(xf).at[src].add(y)
         e_flat = idx.reshape(-1)
         g_flat = gates.reshape(-1)
-        tok = jnp.repeat(jnp.arange(n), K)
+        tok = jnp.repeat(jnp.arange(n), cfg.k)
         perm = jnp.argsort(e_flat, stable=True)
-        gs = jnp.bincount(e_flat, length=N_EXPERTS)
+        gs = jnp.bincount(e_flat, length=cfg.n_experts)
         xs = xf[tok[perm]]
         h = ops.cvmm(xs, gs, w1, impl=impl)
         u = jax.nn.relu(h)
-        if GLU:
+        if cfg.glu:
             u = u * ops.cvmm(xs, gs, w1g, impl=impl)
         y = ops.cvmm(u, gs, w2, impl=impl)
         y = y * g_flat[perm][:, None].astype(y.dtype)
@@ -95,23 +129,27 @@ def _time(fn, args, iters=ITERS):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def _est_bytes(impl: str, itemsize: int = 4) -> dict:
+def _est_bytes(impl: str, cfg: BenchConfig, itemsize: int = 4) -> dict:
     """Materialized-intermediate bytes for one fwd(+bwd), analytic model.
 
     Counts only buffers that round-trip through HBM *between* compute stages
     (the traffic fusion removes); weights/activations read in place are common
-    to every impl and excluded."""
-    nk = N_TOKENS * K
-    m_pad = round_up(nk, TM) + N_EXPERTS * TM
-    d, g = round_up(D_MODEL, LANE), round_up(EXPERT_SIZE, LANE)
+    to every impl and excluded. The streamed fused path never materializes the
+    unsorted activations in any other layout at the XLA level — forward's only
+    intermediates are the kernel outputs, and backward's tile-aligned gathers
+    run inside the row-DMA gather kernel."""
+    nk = cfg.n_tokens * cfg.k
+    m_pad = round_up(nk, TM) + cfg.n_experts * TM
+    d = round_up(cfg.d_model, LANE)
+    g = round_up(cfg.expert_size, LANE)
     row = itemsize
-    n_w1 = 2 if GLU else 1
+    n_w1 = 2 if cfg.glu else 1
     if impl == "pallas_fused":
         # fwd: u (w1 out, act+GLU applied in-kernel) + y_pad (gate in-kernel)
         fwd = m_pad * g * row + m_pad * d * row
         # training fwd additionally writes h(/hg) in the same grid pass (no
-        # recompute GEMMs in bwd); bwd: dy_pad + x_pad (the single layout
-        # materialization of the backward) + t0 + dx_pad
+        # recompute GEMMs in bwd); bwd: dy_pad + x_pad (the streamed gather
+        # kernel's tile-aligned outputs) + t0 + dx_pad
         bwd = (n_w1 * m_pad * g + 2 * m_pad * d + m_pad * g + m_pad * d) * row
     elif impl in ("pallas", "pallas_interpret"):
         # fwd: gathered xs + x_pad scatter + per-GEMM (pad in, out, unpad) +
@@ -129,45 +167,60 @@ def _est_bytes(impl: str, itemsize: int = 4) -> dict:
     return {"fwd": int(fwd), "fwd_bwd": int(fwd + bwd)}
 
 
-def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
-    args = _setup()
+def _bench_config(cfg: BenchConfig, iters: int, with_bwd: bool) -> dict:
+    args = _setup(cfg)
     results = {}
     for impl in ("ragged", "pallas", "pallas_fused"):
-        f = _mlp(impl)
-        fwd = jax.jit(f)
-        probe = lambda *a: f(*a).astype(jnp.float32).sum()
-        grad = jax.jit(jax.grad(probe, argnums=(0, 2, 3, 4, 5)))
-        fwd_us = _time(fwd, args, iters)
-        fwd_bwd_us = _time(grad, args, iters)
-        results[impl] = {
-            "fwd_us": round(fwd_us, 1),
-            "fwd_bwd_us": round(fwd_bwd_us, 1),
-            "est_intermediate_bytes": _est_bytes(impl),
-        }
+        f = _mlp(impl, cfg)
+        entry = {"fwd_us": round(_time(jax.jit(f), args, iters), 1),
+                 "est_intermediate_bytes": _est_bytes(impl, cfg)}
+        if with_bwd:
+            probe = lambda *a: f(*a).astype(jnp.float32).sum()
+            grad = jax.jit(jax.grad(probe, argnums=(0, 2, 3, 4, 5)))
+            entry["fwd_bwd_us"] = round(_time(grad, args, iters), 1)
+        results[impl] = entry
+    speedup = {"fwd": round(results["pallas"]["fwd_us"]
+                            / max(results["pallas_fused"]["fwd_us"], 1e-9), 3)}
+    if with_bwd:
+        speedup["fwd_bwd"] = round(
+            results["pallas"]["fwd_bwd_us"]
+            / max(results["pallas_fused"]["fwd_bwd_us"], 1e-9), 3)
+    return {"config": cfg._asdict(), "results": results,
+            "fused_speedup_vs_pallas": speedup}
+
+
+def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
+    base = _bench_config(BASE, iters, with_bwd=True)
+    large_cfg = _large_n_config()
+    # past the old residency boundary: fwd-only + few iters (interpret-mode
+    # calls here are ~100x the base config's work per call)
+    large = _bench_config(large_cfg, min(iters, 2), with_bwd=False)
     payload = {
-        "config": {"n_tokens": N_TOKENS, "d_model": D_MODEL,
-                   "n_experts": N_EXPERTS, "expert_size": EXPERT_SIZE,
-                   "k": K, "glu": GLU, "iters": iters,
+        "config": {**base["config"], "iters": iters,
                    "backend": jax.default_backend(),
                    "note": "pallas impls run in interpret mode off-TPU"},
-        "results": results,
-        "fused_speedup_vs_pallas": {
-            "fwd": round(results["pallas"]["fwd_us"]
-                         / max(results["pallas_fused"]["fwd_us"], 1e-9), 3),
-            "fwd_bwd": round(results["pallas"]["fwd_bwd_us"]
-                             / max(results["pallas_fused"]["fwd_bwd_us"], 1e-9), 3),
-        },
+        "results": base["results"],
+        "fused_speedup_vs_pallas": base["fused_speedup_vs_pallas"],
+        "large_n": {**large,
+                    "note": "token count past the retired whole-x VMEM "
+                            "boundary; streamed row-DMA gather territory"},
     }
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)
     rows = [f"cvmm/{impl}_fwd,{r['fwd_us']},"
             f"est_bytes={r['est_intermediate_bytes']['fwd']}"
-            for impl, r in results.items()]
+            for impl, r in base["results"].items()]
     rows += [f"cvmm/{impl}_fwd_bwd,{r['fwd_bwd_us']},"
              f"est_bytes={r['est_intermediate_bytes']['fwd_bwd']}"
-             for impl, r in results.items()]
-    rows.append(f"# wrote {out_path}; fused/unfused fwd+bwd speedup "
-                f"{payload['fused_speedup_vs_pallas']['fwd_bwd']}x")
+             for impl, r in base["results"].items()]
+    rows += [f"cvmm/large_n{large_cfg.n_tokens}/{impl}_fwd,{r['fwd_us']},"
+             f"est_bytes={r['est_intermediate_bytes']['fwd']}"
+             for impl, r in large["results"].items()]
+    rows.append(
+        f"# wrote {out_path}; fused/unfused fwd+bwd speedup "
+        f"{payload['fused_speedup_vs_pallas']['fwd_bwd']}x; large-N "
+        f"(n={large_cfg.n_tokens}) fwd speedup "
+        f"{large['fused_speedup_vs_pallas']['fwd']}x")
     return rows
 
 

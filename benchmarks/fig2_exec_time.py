@@ -15,6 +15,7 @@ from repro.configs import moe_ffn
 from repro.configs.base import FFNConfig
 from repro.core import apply_dense, apply_moe, init_dense, init_moe
 from repro.kernels import ops as kops
+from repro.kernels.cvmm import TM, legacy_whole_x_rows
 
 from .common import csv_row, time_layer
 
@@ -68,6 +69,33 @@ def run():
                 f"fig2/moe_sort_fused_d{d_model}", us_f,
                 f"active_param_bytes={active_bytes};"
                 f"ratio_vs_sort={us_f/us_m:.2f}"))
+
+    # The streamed-gather regime: a token count PAST the retired whole-x VMEM
+    # residency boundary, where the pre-streaming gate rejected the fused path
+    # and silently fell back to the unfused kernels. One row, d_model=128,
+    # K=1/no-GLU to keep the interpret-mode fwd+bwd tolerable on CPU.
+    d_model = 128
+    n_large = legacy_whole_x_rows(k_pad=d_model, bytes_per_el=4,
+                                  n_weights=1, n_out=2) + TM
+    lcfg = moe_ffn(4, 128, 1, dispatch="sort")
+    lp = init_moe(jax.random.PRNGKey(1), d_model, lcfg, 1)
+    xl = jax.random.normal(jax.random.PRNGKey(2), (n_large, d_model),
+                           jnp.float32)
+    # pin the baseline to the UNFUSED pallas path: on TPU the default impl is
+    # pallas_fused, which would make ratio_vs_sort compare fused to itself
+    kops.set_default_impl("pallas")
+    try:
+        us_u = time_layer(lambda p, x: apply_moe(p, x, lcfg), lp, xl, iters=2)
+    finally:
+        kops.set_default_impl(None)
+    kops.set_default_impl("pallas_fused")
+    try:
+        us_s = time_layer(lambda p, x: apply_moe(p, x, lcfg), lp, xl, iters=2)
+    finally:
+        kops.set_default_impl(None)
+    rows.append(csv_row(
+        f"fig2/moe_sort_fused_stream_n{n_large}", us_s,
+        f"past_whole_x_budget=1;ratio_vs_sort={us_s/us_u:.2f}"))
     return rows
 
 

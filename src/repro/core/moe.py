@@ -135,7 +135,11 @@ def _apply_sort(params: Dict, xf: jax.Array, cfg: FFNConfig, info: SelectionInfo
 
     "pallas_fused": the gather, the w1 activation/GLU epilogue and the w2 gate
     multiply run inside the grouped-GEMM kernels; nothing between the routing
-    and the final scatter-add is materialized at the XLA level.
+    and the final scatter-add is materialized at the XLA level. The gather
+    streams rows HBM->VMEM through a double-buffered DMA pipeline, so
+    ``fused_supported`` gates only on tile-level residency (activation
+    fusibility + per-step tile working set) — production token counts no
+    longer fall back to the unfused path.
 
     "pallas"/"ragged"/"ref": 1. flatten (token, k) pairs; 2. stable-argsort by
     expert id (the paper's CUDA kernel does exactly this reordering); 3. grouped

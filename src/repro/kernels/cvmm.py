@@ -27,16 +27,32 @@ Unfused kernels (building blocks, also the backward pass of the fused path)
                   revisits are consecutive and accumulation is legal on TPU.
 
 Fused forward pipeline (one HBM round-trip per matmul, nothing else)
-  cvmm_fused_w1_pallas   gather + GEMM + activation(/GLU) epilogue. ``row_src``
-      is scalar-prefetched; on the first N-tile of each row tile the kernel
-      gathers the TM source rows of the *unsorted* activations (resident in
-      VMEM as a whole-array block) into a scratch tile via dynamic slices, then
-      reuses the scratch for the remaining N-tiles. With GLU both W1 and W1g
-      blocks are read in the same grid pass and u = act(x@w1) * (x@w1g) is
-      written directly — the materialized (N*K, d) gather, the x_pad scatter,
-      and the standalone activation pass all disappear.
+  cvmm_fused_w1_pallas   gather + GEMM + activation(/GLU) epilogue. The
+      unsorted activations stay in HBM (``pltpu.ANY`` memory space) — the
+      kernel never requires whole-array VMEM residency, so it scales to
+      production token counts. ``row_src`` is scalar-prefetched and drives a
+      double-buffered row-DMA pipeline: on the first N-tile of row tile ``i``
+      the kernel waits for tile ``i``'s gather (issued one tile earlier into
+      one of two (TM, K) VMEM scratch buffers via ``pltpu.make_async_copy``)
+      and immediately starts tile ``i+1``'s gather into the other buffer, so
+      the HBM row reads overlap the MXU work of the current tile. Slack slots
+      (sentinel ``row_src``) are *skipped*, not clamped-gathered: their scratch
+      rows are zeroed, so slack outputs are finite and killed downstream by the
+      zero gate + scatter-drop. With GLU both W1 and W1g blocks are read in the
+      same grid pass and u = act(x@w1) * (x@w1g) is written directly — the
+      materialized (N*K, d) gather, the x_pad scatter, and the standalone
+      activation pass all disappear.
   cvmm_fused_w2_pallas   GEMM + per-row gate multiply in the epilogue, so
       ``y_sorted * g_flat[perm]`` is never a separate XLA pass.
+  cvmm_gather_rows_pallas  the same double-buffered row-DMA pipeline as a bare
+      gather: unsorted HBM rows -> tile-aligned (M_pad, K) layout, zeros on
+      slack. The backward pass uses it to materialize its (single) gathered
+      operands with the streamed plan instead of an XLA-level take.
+
+VMEM working set per grid step: two (TM, K) gather buffers + the (pipelined)
+weight and output tiles — independent of the activation row count
+(``fused_w1_tn`` does the accounting; ``ops.fused_supported`` now gates only
+on this tile-level residency).
 
 dX reuses the forward kernel with w transposed.
 """
@@ -55,6 +71,7 @@ from .compat import tpu_compiler_params
 TM = 128            # row tile (MXU-aligned)
 LANE = 128          # lane multiple for K / N
 VMEM_BUDGET = 12 * 1024 * 1024
+N_BUFFERS = 2       # gather scratch slots (double buffering)
 
 # Activations that are elementwise (tile-local) and therefore legal to apply
 # inside a kernel epilogue on an (TM, TN) tile.
@@ -74,25 +91,44 @@ def _pick_tn(k_pad: int, n_pad: int, bytes_per_el: int) -> int:
     return 128
 
 
-def fused_w1_tn(n_rows: int, k_pad: int, g_pad: int, bytes_per_el: int,
+def fused_w1_tn(k_pad: int, g_pad: int, bytes_per_el: int,
                 n_weights: int, n_out: int):
-    """Largest fitting N tile for the gather-fused w1 kernel, or None.
+    """Largest fitting N tile for the streamed gather-fused w1 kernel, or None.
 
-    Unlike ``_pick_tn`` this models the kernel's FULL working set — the
-    whole-array x block, the (TM, K) gather scratch, every weight tile and
-    every output tile (3 with GLU + save_preact) — and returns None rather
-    than silently under-tiling when nothing fits: callers must fall back to
-    the unfused path instead of compiling a kernel that exhausts VMEM."""
-    x_bytes = n_rows * k_pad * bytes_per_el
-    scratch = TM * k_pad * bytes_per_el
+    Models the kernel's FULL per-step working set — two (TM, K) gather scratch
+    buffers, plus the weight tiles and output tiles (3 with GLU + save_preact)
+    at 2x for Mosaic's automatic pipeline double-buffering of blocked operands.
+    The activations stream row-by-row from HBM, so — unlike the retired
+    whole-x-resident kernel — the row count does not appear here at all.
+    Returns None rather than silently under-tiling when nothing fits: callers
+    must fall back to the unfused path instead of compiling a kernel that
+    exhausts VMEM."""
+    scratch = N_BUFFERS * TM * k_pad * bytes_per_el
     for tn in (512, 384, 256, 128):
         if tn > g_pad or g_pad % tn:
             continue
-        ws = (x_bytes + scratch + n_weights * k_pad * tn * bytes_per_el
-              + n_out * TM * tn * max(bytes_per_el, 4))
+        ws = scratch + 2 * (n_weights * k_pad * tn * bytes_per_el
+                            + n_out * TM * tn * max(bytes_per_el, 4))
         if ws <= VMEM_BUDGET:
             return tn
     return None
+
+
+def legacy_whole_x_rows(k_pad: int, bytes_per_el: int, n_weights: int,
+                        n_out: int) -> int:
+    """Max activation rows the RETIRED whole-x-resident w1 kernel accepted.
+
+    The pre-streaming kernel kept the entire (N, K) unsorted activation block
+    in VMEM next to one (TM, K) gather scratch, the weight tiles and the output
+    tiles (at the minimum tn=128), so its residency gate capped the row count
+    at roughly (VMEM_BUDGET - tiles) / row_bytes. Kept as the reference point
+    for tests and benchmarks that must demonstrate the streamed kernel working
+    far beyond this boundary; reads ``VMEM_BUDGET`` at call time so tests can
+    shrink the budget to sweep the boundary cheaply."""
+    tiles = (TM * k_pad * bytes_per_el
+             + n_weights * k_pad * 128 * bytes_per_el
+             + n_out * TM * 128 * max(bytes_per_el, 4))
+    return max((VMEM_BUDGET - tiles) // (k_pad * bytes_per_el), 0)
 
 
 # ---------------------------------------------------------------------------
@@ -189,33 +225,81 @@ def cvmm_dw_pallas(x_pad: jax.Array, tile_expert: jax.Array, g_pad: jax.Array,
 # Fused forward kernels
 # ---------------------------------------------------------------------------
 
-def _gather_rows(i, row_src_ref, x_ref, xs_ref, n_rows: int):
-    """Gather the TM source rows of row tile ``i`` into VMEM scratch.
+def _gather_issue(t, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows: int):
+    """Zero slot ``t % N_BUFFERS`` and start the row DMAs for row tile ``t``.
 
-    Runs on the first N-tile of each row tile only; the scratch persists across
-    the (sequential) inner grid dimension. Slack slots carry the sentinel
-    ``n_rows`` — clamped here, their (finite) outputs are killed by the zero
-    gate and the scatter-drop at the XLA level.
-    """
+    One ``make_async_copy`` per real row, HBM -> VMEM scratch; slack slots
+    (sentinel ``row_src`` >= n_rows) are *skipped*, so their scratch rows keep
+    the zeros written here — the downstream GEMM sees finite values and the
+    zero gate / scatter-drop kills the result. All copies of a tile signal the
+    slot's semaphore; ``_gather_wait`` reconstructs the same descriptors."""
+    slot = jax.lax.rem(t, N_BUFFERS)
+    xs_ref[slot] = jnp.zeros(xs_ref.shape[1:], xs_ref.dtype)
+
     def body(r, _):
-        src = jnp.minimum(row_src_ref[i * TM + r], n_rows - 1)
-        xs_ref[pl.ds(r, 1), :] = x_ref[pl.ds(src, 1), :]
+        src = row_src_ref[t * TM + r]
+
+        @pl.when(src < n_rows)
+        def _():
+            pltpu.make_async_copy(x_hbm.at[pl.ds(src, 1), :],
+                                  xs_ref.at[slot, pl.ds(r, 1), :],
+                                  sem_ref.at[slot]).start()
         return 0
 
     jax.lax.fori_loop(0, TM, body, 0)
 
 
-def _fused_w1_body(row_src_ref, x_ref, w1_ref, w1g_ref, o_u_ref, o_h_ref,
-                   o_hg_ref, xs_ref, *, act_name: str, n_rows: int):
+def _gather_wait(t, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows: int):
+    """Wait for every row DMA issued by ``_gather_issue`` for row tile ``t``."""
+    slot = jax.lax.rem(t, N_BUFFERS)
+
+    def body(r, _):
+        src = row_src_ref[t * TM + r]
+
+        @pl.when(src < n_rows)
+        def _():
+            pltpu.make_async_copy(x_hbm.at[pl.ds(src, 1), :],
+                                  xs_ref.at[slot, pl.ds(r, 1), :],
+                                  sem_ref.at[slot]).wait()
+        return 0
+
+    jax.lax.fori_loop(0, TM, body, 0)
+
+
+def _stream_tile(i, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows: int):
+    """Double-buffered gather step for row tile ``i`` (grid dim 0, sequential).
+
+    Waits for tile ``i``'s rows (issued one tile earlier; warm-up issues tile 0
+    inline) and immediately starts tile ``i+1``'s DMAs into the other scratch
+    slot, so the HBM reads of the next tile overlap this tile's MXU work.
+    Returns the slot holding tile ``i``."""
+    m_tiles = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _warmup():
+        _gather_issue(0, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+
+    _gather_wait(i, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+
+    @pl.when(i + 1 < m_tiles)
+    def _prefetch_next():
+        _gather_issue(i + 1, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+
+    return jax.lax.rem(i, N_BUFFERS)
+
+
+def _fused_w1_body(row_src_ref, x_hbm, w1_ref, w1g_ref, o_u_ref, o_h_ref,
+                   o_hg_ref, xs_ref, sem_ref, *, act_name: str, n_rows: int):
     i, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
     def _():
-        _gather_rows(i, row_src_ref, x_ref, xs_ref, n_rows)
-    h = jnp.dot(xs_ref[...], w1_ref[0], preferred_element_type=jnp.float32)
+        _stream_tile(i, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+    xt = xs_ref[jax.lax.rem(i, N_BUFFERS)]
+    h = jnp.dot(xt, w1_ref[0], preferred_element_type=jnp.float32)
     u = act_fn(act_name)(h)
     if w1g_ref is not None:
-        hg = jnp.dot(xs_ref[...], w1g_ref[0],
+        hg = jnp.dot(xt, w1g_ref[0],
                      preferred_element_type=jnp.float32)
         u = u * hg
         if o_hg_ref is not None:
@@ -225,20 +309,20 @@ def _fused_w1_body(row_src_ref, x_ref, w1_ref, w1g_ref, o_u_ref, o_h_ref,
     o_u_ref[...] = u.astype(o_u_ref.dtype)
 
 
-def _k_w1(rs, te, x, w1, o_u, xs, **kw):
-    _fused_w1_body(rs, x, w1, None, o_u, None, None, xs, **kw)
+def _k_w1(rs, te, x, w1, o_u, xs, sem, **kw):
+    _fused_w1_body(rs, x, w1, None, o_u, None, None, xs, sem, **kw)
 
 
-def _k_w1_save(rs, te, x, w1, o_u, o_h, xs, **kw):
-    _fused_w1_body(rs, x, w1, None, o_u, o_h, None, xs, **kw)
+def _k_w1_save(rs, te, x, w1, o_u, o_h, xs, sem, **kw):
+    _fused_w1_body(rs, x, w1, None, o_u, o_h, None, xs, sem, **kw)
 
 
-def _k_w1_glu(rs, te, x, w1, w1g, o_u, xs, **kw):
-    _fused_w1_body(rs, x, w1, w1g, o_u, None, None, xs, **kw)
+def _k_w1_glu(rs, te, x, w1, w1g, o_u, xs, sem, **kw):
+    _fused_w1_body(rs, x, w1, w1g, o_u, None, None, xs, sem, **kw)
 
 
-def _k_w1_glu_save(rs, te, x, w1, w1g, o_u, o_h, o_hg, xs, **kw):
-    _fused_w1_body(rs, x, w1, w1g, o_u, o_h, o_hg, xs, **kw)
+def _k_w1_glu_save(rs, te, x, w1, w1g, o_u, o_h, o_hg, xs, sem, **kw):
+    _fused_w1_body(rs, x, w1, w1g, o_u, o_h, o_hg, xs, sem, **kw)
 
 
 def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
@@ -246,11 +330,14 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
                          w1g: jax.Array | None, *, act_name: str,
                          save_preact: bool = False,
                          interpret: bool = False):
-    """Gather-fused grouped GEMM with activation(/GLU) epilogue.
+    """Streamed gather-fused grouped GEMM with activation(/GLU) epilogue.
 
-    x (N_rows, K_pad) — the UNSORTED activations, resident in VMEM as one
-    block; row_src (M_pad,) int32 maps padded slots to rows of x (sentinel
-    N_rows on slack); w1/w1g (E, K_pad, G_pad). Returns u (M_pad, G_pad) in the
+    x (N_rows, K_pad) — the UNSORTED activations, left in HBM (``pltpu.ANY``)
+    and streamed row-by-row through a double-buffered async-copy pipeline (see
+    ``_stream_tile``); the row count is unconstrained — no multiple-of-8
+    padding, no whole-array VMEM residency. row_src (M_pad,) int32 maps padded
+    slots to rows of x (sentinel >= N_rows on slack; those rows are skipped and
+    zero-filled); w1/w1g (E, K_pad, G_pad). Returns u (M_pad, G_pad) in the
     tile-aligned sorted layout, already activated (and gated when w1g given).
 
     ``save_preact=True`` (training: the custom_vjp forward rule) additionally
@@ -260,21 +347,20 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
     e, k_w, g_pad = w1.shape
     m_pad = row_src.shape[0]
     assert k_w == k_pad and m_pad % TM == 0
-    assert k_pad % LANE == 0 and g_pad % LANE == 0 and n_rows % 8 == 0
+    assert k_pad % LANE == 0 and g_pad % LANE == 0
     n_weights = 2 if w1g is not None else 1
     n_out = (1 + n_weights) if save_preact else 1
-    tn = fused_w1_tn(n_rows, k_pad, g_pad, x.dtype.itemsize, n_weights, n_out)
+    tn = fused_w1_tn(k_pad, g_pad, x.dtype.itemsize, n_weights, n_out)
     if tn is None:
         raise ValueError(
-            f"fused w1 working set exceeds VMEM budget for x ({n_rows}, "
-            f"{k_pad}); gate calls with ops.fused_supported")
+            f"fused w1 tile working set exceeds VMEM budget for K_pad="
+            f"{k_pad}; gate calls with ops.fused_supported")
     grid = (m_pad // TM, g_pad // tn)
 
     w_spec = pl.BlockSpec((1, k_pad, tn), lambda i, j, rs, te: (te[i], 0, j))
     o_spec = pl.BlockSpec((TM, tn), lambda i, j, rs, te: (i, j))
     o_shape = jax.ShapeDtypeStruct((m_pad, g_pad), x.dtype)
-    in_specs = [pl.BlockSpec((n_rows, k_pad), lambda i, j, rs, te: (0, 0)),
-                w_spec]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY), w_spec]
     operands = [row_src, tile_expert, x, w1]
     if w1g is not None:
         in_specs.append(w_spec)
@@ -291,7 +377,8 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
             grid=grid,
             in_specs=in_specs,
             out_specs=[o_spec] * n_out,
-            scratch_shapes=[pltpu.VMEM((TM, k_pad), x.dtype)],
+            scratch_shapes=[pltpu.VMEM((N_BUFFERS, TM, k_pad), x.dtype),
+                            pltpu.SemaphoreType.DMA((N_BUFFERS,))],
         ),
         out_shape=[o_shape] * n_out,
         compiler_params=tpu_compiler_params(
@@ -299,6 +386,42 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
         interpret=interpret,
     )(*operands)
     return out[0] if n_out == 1 else tuple(out)
+
+
+def _gather_rows_kernel(row_src_ref, x_hbm, o_ref, xs_ref, sem_ref,
+                        *, n_rows: int):
+    i = pl.program_id(0)
+    slot = _stream_tile(i, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+    o_ref[...] = xs_ref[slot]
+
+
+def cvmm_gather_rows_pallas(x: jax.Array, row_src: jax.Array,
+                            *, interpret: bool = False) -> jax.Array:
+    """Streamed gather: unsorted HBM rows -> tile-aligned (M_pad, K_pad) copy.
+
+    The same double-buffered row-DMA pipeline as the fused w1 kernel, with the
+    scratch tile written straight to the blocked output (slack slots zero).
+    The backward pass uses this to materialize its gathered operands for the
+    dW / gather-transpose kernels with the SAME streamed plan as forward — the
+    unsorted array never needs whole-array VMEM residency there either."""
+    n_rows, k_pad = x.shape
+    m_pad = row_src.shape[0]
+    assert m_pad % TM == 0 and k_pad % LANE == 0
+    return pl.pallas_call(
+        functools.partial(_gather_rows_kernel, n_rows=n_rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(m_pad // TM,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=pl.BlockSpec((TM, k_pad), lambda i, rs: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((N_BUFFERS, TM, k_pad), x.dtype),
+                            pltpu.SemaphoreType.DMA((N_BUFFERS,))],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m_pad, k_pad), x.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(row_src, x)
 
 
 def _fused_w2_kernel(tile_expert_ref, u_ref, w2_ref, gate_ref, o_ref):

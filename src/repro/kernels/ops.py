@@ -6,10 +6,13 @@ Backends
                 the XLA level, each grouped GEMM is one pallas_call. On CPU the
                 kernels run in interpret mode — used by the tests.
 "pallas_fused"  The fused pipeline: one ``CvmmPlan`` computed per MoE call, a
-                gather-fused w1 kernel with activation/GLU epilogue and a w2
-                kernel with the gate multiply fused in. The plan is threaded
-                through forward and backward via custom_vjp residuals — no
-                layout recompute, no re-pad in backward. Exposed at the MoE-MLP
+                streamed gather-fused w1 kernel (activations stay in HBM and
+                double-buffer through VMEM row tile by row tile — any token
+                count) with activation/GLU epilogue and a w2 kernel with the
+                gate multiply fused in. The plan is threaded through forward
+                and backward via custom_vjp residuals — no layout recompute,
+                no re-pad in backward, and the backward's gathers reuse the
+                same streamed row-DMA pipeline. Exposed at the MoE-MLP
                 granularity via ``moe_mlp_fused``; for the bare ``cvmm`` API it
                 degrades to the planned unfused path (a single GEMM has no
                 epilogue to fuse).
@@ -40,8 +43,8 @@ from jax import dtypes
 from ..common import act_fn, round_up
 from . import ref as refk
 from .cvmm import (FUSIBLE_ACTIVATIONS, LANE, TM, cvmm_dw_pallas,
-                   cvmm_fused_w1_pallas, cvmm_fused_w2_pallas, cvmm_pallas,
-                   fused_w1_tn)
+                   cvmm_fused_w1_pallas, cvmm_fused_w2_pallas,
+                   cvmm_gather_rows_pallas, cvmm_pallas, fused_w1_tn)
 
 _FORCED_IMPL: Optional[str] = None
 
@@ -206,25 +209,30 @@ def cvmm_planned(x: jax.Array, plan: CvmmPlan, w: jax.Array,
 def fused_supported(n_tokens: int, d_model: int, expert_size: int,
                     activation: str, dtype=jnp.float32,
                     glu: bool = False) -> bool:
-    """The gather-fused w1 kernel keeps the whole activation matrix resident in
-    VMEM; bail out (callers fall back to the unfused path) when its full
-    working set would not fit at any tile size, or when the activation is not
-    tile-local. Sized for the worst case (training: save_preact outputs)."""
+    """Gate for the fused pipeline: TILE-level residency only.
+
+    The streamed w1 kernel keeps the unsorted activations in HBM and
+    double-buffers (TM, K) row tiles through VMEM, so the token count no
+    longer appears in the residency check at all (``n_tokens`` is kept in the
+    signature for callers/telemetry but cannot flip the answer). Callers fall
+    back to the unfused path only when the activation is not tile-local or the
+    per-step tile working set itself cannot fit at any tile size (huge
+    d_model). Sized for the worst case (training: save_preact outputs)."""
+    del n_tokens  # streamed: any row count is supported
     if activation not in FUSIBLE_ACTIVATIONS:
         return False
     n_weights = 2 if glu else 1
-    return fused_w1_tn(round_up(n_tokens, 8), round_up(d_model, LANE),
-                       round_up(expert_size, LANE), jnp.dtype(dtype).itemsize,
-                       n_weights, n_out=1 + n_weights) is not None
+    return fused_w1_tn(round_up(d_model, LANE), round_up(expert_size, LANE),
+                       jnp.dtype(dtype).itemsize, n_weights,
+                       n_out=1 + n_weights) is not None
 
 
 def _fused_fwd_impl(static, xf, plan, w1, w1g, w2, save_preact=False):
     act_name, interpret = static
     n, d = xf.shape
+    # Lane-pad the feature dim only: the streamed kernel gathers rows straight
+    # out of HBM, so no row-count padding is needed (sentinel row_src == n).
     xe = _pad_lane(xf, 1)
-    row_pad = round_up(n, 8) - n
-    if row_pad:
-        xe = jnp.pad(xe, ((0, row_pad), (0, 0)))
     w1_out = cvmm_fused_w1_pallas(
         xe, plan.row_src, plan.tile_expert, _pad_w(w1),
         _pad_w(w1g) if w1g is not None else None,
@@ -264,10 +272,12 @@ def _fused_bwd(static, res, dy):
     gate = plan.gate_tiles.reshape(m_pad)[:, None]        # (M_pad, 1) f32
 
     # The single layout materialization of the backward pass: cotangent and
-    # activations into the tile-aligned layout (sentinel rows -> 0).
-    dy_pad = jnp.take(_pad_lane(dy, 1), plan.row_src, axis=0, mode="fill",
-                      fill_value=0)
-    x_pad = jnp.take(xe, plan.row_src, axis=0, mode="fill", fill_value=0)
+    # activations into the tile-aligned layout via the SAME streamed
+    # double-buffered row-DMA plan as forward (sentinel rows -> 0); the
+    # unsorted arrays stay in HBM here too, no whole-array residency.
+    dy_pad = cvmm_gather_rows_pallas(_pad_lane(dy, 1), plan.row_src,
+                                     interpret=interpret)
+    x_pad = cvmm_gather_rows_pallas(xe, plan.row_src, interpret=interpret)
 
     t0 = cvmm_pallas(dy_pad, plan.tile_expert, jnp.swapaxes(w2p, 1, 2),
                      interpret=interpret)                 # dy @ w2^T, no gate

@@ -1,0 +1,175 @@
+"""Property-based parity for the STREAMED fused CVMM pipeline.
+
+The PR-1 fused kernel required the whole unsorted activation matrix to be
+resident in VMEM, so ``ops.fused_supported`` rejected token counts past
+``VMEM_BUDGET / row_bytes`` and production-sized calls silently fell back to
+the unfused path. The streamed kernel double-buffers row tiles HBM->VMEM, so
+these tests sweep token counts *straddling and far beyond* the old whole-x
+boundary and check fwd+bwd parity against the pure-jnp ``ref`` oracle
+(kernels/ref.py), in interpret mode on CPU.
+
+To keep the boundary cheap to cross, ``cvmm.VMEM_BUDGET`` is shrunk to 1 MiB
+for the kernel-parity tests (``legacy_whole_x_rows`` reads it at call time, so
+the "old boundary" shrinks with it — the streaming logic itself is untouched
+by the budget).
+
+`hypothesis` is an OPTIONAL dev dependency (requirements-dev.txt): the
+property test is skipped when it is missing, and a deterministic
+non-hypothesis boundary sweep covers the same parity either way.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # module-level importorskip would hide the tests below;
+    HAVE_HYPOTHESIS = False  # the property test reports as an explicit skip
+
+from repro.kernels import cvmm, ops
+from repro.kernels import ref as refk
+
+D_MODEL = 128            # == LANE: k_pad is exactly d_model, no hidden padding
+SMALL_BUDGET = 1 << 20   # 1 MiB: old whole-x boundary ~1280 fp32 rows
+
+
+@pytest.fixture
+def small_vmem_budget(monkeypatch):
+    monkeypatch.setattr(cvmm, "VMEM_BUDGET", SMALL_BUDGET)
+
+
+def _old_boundary(dtype, glu) -> int:
+    """Max token count the retired whole-x kernel's gate accepted (worst case:
+    training outputs), under the currently-set VMEM_BUDGET."""
+    n_weights = 2 if glu else 1
+    return cvmm.legacy_whole_x_rows(D_MODEL, jnp.dtype(dtype).itemsize,
+                                    n_weights, n_out=1 + n_weights)
+
+
+def _mk(n, e, g, k, e_valid, dtype, seed, skew=False):
+    key = jax.random.PRNGKey(seed)
+    kx, ki, kg, k1, k2, k3 = jax.random.split(key, 6)
+    xf = jax.random.normal(kx, (n, D_MODEL), jnp.float32).astype(dtype)
+    if skew:                 # every token on one expert: maximally ragged
+        idx = jnp.zeros((n, k), jnp.int32)
+    else:
+        idx = jax.random.randint(ki, (n, k), 0, e_valid)
+    gates = jax.nn.softmax(jax.random.normal(kg, (n, k), jnp.float32), -1)
+    w1 = (0.3 * jax.random.normal(k1, (e, D_MODEL, g), jnp.float32)).astype(dtype)
+    w1g = (0.3 * jax.random.normal(k2, (e, D_MODEL, g), jnp.float32)).astype(dtype)
+    w2 = (0.3 * jax.random.normal(k3, (e, g, D_MODEL), jnp.float32)).astype(dtype)
+    return xf, idx, gates, w1, w1g, w2
+
+
+def _oracle_mlp_ref(xf, idx, gates, w1, w1g, w2, e, act):
+    """The sort-path expert MLP on the pure-jnp one-hot ``ref`` oracle."""
+    n, k = idx.shape
+    e_flat = idx.reshape(-1)
+    g_flat = gates.reshape(-1)
+    tok = jnp.repeat(jnp.arange(n), k)
+    perm = jnp.argsort(e_flat, stable=True)
+    gs = jnp.bincount(e_flat, length=e).astype(jnp.int32)
+    xs = xf[tok[perm]]
+    h = refk.cvmm_ref(xs, gs, w1)
+    u = act(h)
+    if w1g is not None:
+        u = u * refk.cvmm_ref(xs, gs, w1g)
+    y = refk.cvmm_ref(u, gs, w2)
+    y = y * g_flat[perm][:, None].astype(y.dtype)
+    return jnp.zeros_like(xf).at[tok[perm]].add(y)
+
+
+def _check_parity(n, e, g, k, e_valid, dtype, seed, glu, *, bwd=True,
+                  skew=False):
+    xf, idx, gates, w1, w1g, w2 = _mk(n, e, g, k, e_valid, dtype, seed, skew)
+    if not glu:
+        w1g = None
+    f32 = dtype == jnp.float32
+    tol_f, tol_b = (1e-5, 3e-4) if f32 else (0.12, 0.2)
+
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    got = ops.moe_mlp_fused(xf, plan, w1, w2, w1g, activation="relu",
+                            interpret=True)
+    want = _oracle_mlp_ref(xf, idx, gates, w1, w1g, w2, e, jax.nn.relu)
+    want = np.asarray(want, np.float32)
+    if not f32:
+        # The oracle rounds u (and the gate multiply) through bf16 while the
+        # kernel keeps them in the f32 epilogue, so elements with partial
+        # cancellation in the w2 accumulation differ by an ABSOLUTE margin set
+        # by the output scale, not by their own magnitude.
+        tol_f = max(tol_f, 0.02 * float(np.abs(want).max()))
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               atol=tol_f, rtol=tol_f)
+    if not bwd:
+        return
+
+    def loss_fused(xf, gates, w1, w2):
+        plan = ops.make_moe_plan(idx, gates, n, e)
+        return ops.moe_mlp_fused(xf, plan, w1, w2, w1g, activation="relu",
+                                 interpret=True).astype(jnp.float32).sum()
+
+    def loss_ref(xf, gates, w1, w2):
+        return _oracle_mlp_ref(xf, idx, gates, w1, w1g, w2, e,
+                               jax.nn.relu).astype(jnp.float32).sum()
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2, 3))(xf, gates, w1, w2)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(xf, gates, w1, w2)
+    for name, a, b in zip(("dx", "dgates", "dw1", "dw2"), gf, gr):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        assert np.isfinite(a).all(), name
+        np.testing.assert_allclose(a, b, atol=tol_b, rtol=tol_b, err_msg=name)
+
+
+def test_streamed_parity_at_4x_old_budget(small_vmem_budget):
+    """THE acceptance check: fused_supported accepts >= 4x the old whole-x
+    budget and the streamed kernel matches the ref oracle there, fwd+bwd."""
+    glu, dtype = True, jnp.float32
+    old = _old_boundary(dtype, glu)
+    n = 4 * old
+    assert ops.fused_supported(n, D_MODEL, 64, "relu", dtype, glu=glu)
+    _check_parity(n, e=4, g=64, k=1, e_valid=4, dtype=dtype, seed=0, glu=glu,
+                  bwd=True)
+
+
+@pytest.mark.parametrize("dtype,glu", [(jnp.float32, True),
+                                       (jnp.bfloat16, False)])
+def test_streamed_parity_straddles_old_boundary(small_vmem_budget, dtype, glu):
+    """Deterministic sweep (runs with or without hypothesis): token counts just
+    below and just above the old whole-x VMEM boundary agree with the oracle,
+    so nothing structural changes as the kernel crosses it."""
+    old = _old_boundary(dtype, glu)
+    f32 = dtype == jnp.float32
+    for i, n in enumerate((old - 257, old + 1, old + 513)):
+        _check_parity(n, e=3, g=32, k=2, e_valid=3, dtype=dtype, seed=i,
+                      glu=glu, bwd=(i == 1) and f32)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_streamed_parity_property(small_vmem_budget):
+    """Random token counts straddling the old boundary x ragged/empty expert
+    groups x GLU on/off x fp32+bf16, fwd and bwd vs the ref oracle."""
+
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.data())
+    def run(data):
+        glu = data.draw(st.booleans(), label="glu")
+        f32 = data.draw(st.booleans(), label="fp32")
+        dtype = jnp.float32 if f32 else jnp.bfloat16
+        old = _old_boundary(dtype, glu)
+        n = old + data.draw(st.integers(-300, 600), label="boundary_offset")
+        e = data.draw(st.integers(2, 4), label="n_experts")
+        # e_valid < e leaves experts with EMPTY groups; skew packs every token
+        # onto one expert (maximally ragged group sizes)
+        e_valid = data.draw(st.integers(1, e), label="e_valid")
+        skew = data.draw(st.booleans(), label="skew")
+        g = data.draw(st.sampled_from((32, 64)), label="expert_size")
+        k = data.draw(st.integers(1, 2), label="k")
+        seed = data.draw(st.integers(0, 2**16), label="seed")
+        _check_parity(n, e, g, k, e_valid, dtype, seed, glu, bwd=f32,
+                      skew=skew)
+
+    run()

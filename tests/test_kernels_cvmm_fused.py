@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import cvmm, ops, ref
 
 # (N_tokens, d_model, E, expert_size G, K, n_valid_experts)
 # n_valid < E models EP-padding: experts >= n_valid are never routed to.
@@ -207,6 +207,115 @@ def test_backward_reuses_forward_plan(monkeypatch):
     assert calls["n"] == 1, f"_tile_layout traced {calls['n']}x (expected 1)"
 
 
+def test_fused_n_rows_not_multiple_of_8():
+    """The streamed kernel gathers rows straight from HBM: no multiple-of-8
+    row-count requirement (the retired whole-x kernel needed xe padded)."""
+    case = (13, 24, 3, 16, 2, 3)
+    n, d, e, g, k, _ = case
+    assert n % 8 != 0
+    xf, idx, gates, w1, w1g, w2 = _mk(case, jnp.float32)
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    got = ops.moe_mlp_fused(xf, plan, w1, w2, w1g, activation="relu",
+                            interpret=True)
+    want = _oracle_mlp(xf, idx, gates, w1, w1g, w2, e, jax.nn.relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+    def loss(xf, w1, w2):
+        plan = ops.make_moe_plan(idx, gates, n, e)
+        return ops.moe_mlp_fused(xf, plan, w1, w2, None, activation="gelu",
+                                 interpret=True).sum()
+
+    def loss_ref(xf, w1, w2):
+        act = lambda x: jax.nn.gelu(x, approximate=True)
+        return _oracle_mlp(xf, idx, gates, w1, None, w2, e, act).sum()
+
+    gf = jax.grad(loss, argnums=(0, 1, 2))(xf, w1, w2)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(xf, w1, w2)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_fused_all_slack_final_tile():
+    """A row tile whose every row_src slot is the sentinel: the streamed gather
+    issues ZERO DMAs for it (slack rows are skipped, not clamped-gathered) and
+    the zero-filled scratch must yield finite outputs that are dropped."""
+    n, d, e, g, k = 16, 16, 2, 8, 1
+    key = jax.random.PRNGKey(3)
+    kx, kg, k1, k2 = jax.random.split(key, 4)
+    xf = jax.random.normal(kx, (n, d), jnp.float32)
+    idx = jnp.zeros((n, k), jnp.int32)            # every token -> expert 0
+    gates = jax.nn.softmax(jax.random.normal(kg, (n, k), jnp.float32), -1)
+    w1 = 0.3 * jax.random.normal(k1, (e, d, g), jnp.float32)
+    w2 = 0.3 * jax.random.normal(k2, (e, g, d), jnp.float32)
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    row_src = np.asarray(plan.row_src).reshape(-1, ops.TM)
+    assert (row_src[-1] == n).all(), "test setup: final tile must be all-slack"
+    got = ops.moe_mlp_fused(xf, plan, w1, w2, None, activation="relu",
+                            interpret=True)
+    assert np.isfinite(np.asarray(got)).all()
+    want = _oracle_mlp(xf, idx, gates, w1, None, w2, e, jax.nn.relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    # gradients also stay finite and match (all-slack tiles contribute zero)
+    g1 = jax.grad(lambda w1: ops.moe_mlp_fused(
+        xf, ops.make_moe_plan(idx, gates, n, e), w1, w2, None,
+        activation="relu", interpret=True).sum())(w1)
+    r1 = jax.grad(lambda w1: _oracle_mlp(
+        xf, idx, gates, w1, None, w2, e, jax.nn.relu).sum())(w1)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(r1),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_fused_single_expert_plan():
+    """E=1 degenerates to a dense MLP with a gate; the streamed plan must
+    handle a single expert (single weight block, one contiguous group)."""
+    n, d, e, g, k = 37, 16, 1, 8, 1
+    case = (n, d, e, g, k, e)
+    xf, idx, gates, w1, w1g, w2 = _mk(case, jnp.float32)
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    got = ops.moe_mlp_fused(xf, plan, w1, w2, w1g, activation="silu",
+                            interpret=True)
+    want = _oracle_mlp(xf, idx, gates, w1, w1g, w2, e, jax.nn.silu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gather_rows_pallas_matches_take():
+    """The streamed backward gather == jnp.take with zero fill on sentinels."""
+    n, d, e, k = 45, 24, 4, 2
+    case = (n, d, e, 16, k, e)
+    xf, idx, gates, *_ = _mk(case, jnp.float32)
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    xe = ops._pad_lane(xf, 1)
+    got = cvmm.cvmm_gather_rows_pallas(xe, plan.row_src, interpret=True)
+    want = jnp.take(xe, plan.row_src, axis=0, mode="fill", fill_value=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_fused_supported_streams_past_whole_x_budget():
+    """Regression for the lifted residency gate: the retired kernel kept the
+    whole (N, K) activation block in VMEM and ``fused_supported`` rejected
+    token counts past that budget; the streamed kernel must accept >= 4x the
+    old boundary (and far beyond), while still rejecting non-tile-local
+    activations and tile working sets that genuinely cannot fit."""
+    d_model, g = 128, 128
+    for dtype, glu in ((jnp.float32, True), (jnp.float32, False),
+                      (jnp.bfloat16, True)):
+        n_weights = 2 if glu else 1
+        old = cvmm.legacy_whole_x_rows(d_model, jnp.dtype(dtype).itemsize,
+                                       n_weights, n_out=1 + n_weights)
+        assert old > 0
+        for mult in (1, 4, 64):
+            assert ops.fused_supported(mult * old, d_model, g, "relu",
+                                       dtype, glu=glu)
+    # still rejected: non-tile-local activation ...
+    assert not ops.fused_supported(64, d_model, g, "softmax")
+    # ... and a d_model whose per-step TILE working set exceeds VMEM
+    assert not ops.fused_supported(64, 1_000_000, g, "relu")
+
+
 def test_moe_sort_dispatch_uses_fused(monkeypatch):
     """apply_moe(dispatch='sort') routes through the fused pipeline when the
     default impl is pallas_fused, and matches the ragged-backed sort path."""
@@ -239,4 +348,49 @@ def test_moe_sort_dispatch_uses_fused(monkeypatch):
         ops.set_default_impl(None)
     assert called["fused"] == 1
     np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("activation,expect_fused", [
+    ("relu", True),        # tile-local: gate says fused
+    ("gelu", True),
+    ("softmax", False),    # not tile-local: gate must force the unfused path
+])
+def test_moe_dispatch_consistent_with_gate(monkeypatch, activation,
+                                           expect_fused):
+    """apply_moe(dispatch='sort') under impl=pallas_fused must pick the fused
+    vs unfused pipeline exactly as ``fused_supported`` answers — and both
+    choices must agree numerically with the ragged-backed sort path."""
+    from repro.configs import moe_ffn
+    from repro.core import apply_moe, init_moe
+
+    d_model, ne, g, k = 32, 4, 16, 2
+    cfg = moe_ffn(ne, g, k, dispatch="sort", activation=activation)
+    p = init_moe(jax.random.PRNGKey(0), d_model, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, d_model), jnp.float32)
+
+    assert ops.fused_supported(x.shape[0] * x.shape[1], d_model, g,
+                               activation, x.dtype, glu=False) == expect_fused
+
+    ops.set_default_impl("ragged")
+    try:
+        y_ref, _ = apply_moe(p, x, cfg)
+    finally:
+        ops.set_default_impl(None)
+
+    called = {"fused": 0}
+    orig = ops.moe_mlp_fused
+
+    def spy(*a, **kw):
+        called["fused"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(ops, "moe_mlp_fused", spy)
+    ops.set_default_impl("pallas_fused")
+    try:
+        y, _ = apply_moe(p, x, cfg)
+    finally:
+        ops.set_default_impl(None)
+    assert called["fused"] == (1 if expect_fused else 0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                atol=2e-5, rtol=2e-5)
