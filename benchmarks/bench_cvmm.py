@@ -1,11 +1,22 @@
 """CVMM hot-path micro-benchmark: fused vs unfused pallas vs ragged.
 
 Times the dropless expert MLP (the paper's CVMM pipeline, Eq. 11) at a fixed
-routing and emits ``BENCH_cvmm.json``: us/call for forward and forward+backward
-per impl, plus an analytic estimate of the HBM bytes moved through materialized
-intermediates — the quantity the fused pipeline attacks (one layout plan, no
-gathered (N*K, d) copy, no separate activation / gate passes, no re-pad in
-backward).
+routing and emits ``BENCH_cvmm.json``: us/call for forward, forward+backward
+and the directly-timed backward-only (vjp) wall clock per impl, plus an
+analytic estimate
+of the HBM bytes moved through materialized intermediates — the quantity the
+fused pipeline attacks (one layout plan, no gathered (N*K, d) copy forward OR
+backward, no separate activation / gate passes, no re-pad in backward) — and
+the plan's DMA-descriptor counts (run-batched chunks vs the retired
+one-copy-per-row scheme).
+
+``fused_speedup_vs_pallas`` carries three CI-gated signals: ``fwd`` and
+``fwd_bwd`` (>= 1.0), plus ``bwd`` — the directly-timed (vjp) backward that
+isolates the streamed gather-free dW/dX path so a regression there cannot
+hide behind a fast forward pass. On CPU the interpret-mode kernels serialize
+the DMA overlap the streamed backward exists for, so ``bwd`` reads ~1.0
+there (TPU is where the overlap pays); CI gates it as a regression tripwire
+(>= 0.85), not a speedup claim.
 
 Two configs are measured:
 
@@ -120,13 +131,21 @@ def _mlp(impl: str, cfg: BenchConfig):
 
 
 def _time(fn, args, iters=ITERS):
+    """us/call as the MINIMUM over ``iters`` individually synced calls.
+
+    On a shared/loaded host a mean absorbs contention spikes straight into
+    the CI-gated speedup ratios (observed swings > 50% run-to-run at low
+    iters); the min estimates the uncontended cost of each program, which is
+    the quantity the fused-vs-unfused comparison is about. Per-call sync
+    overhead is negligible against these multi-ms interpret-mode kernels."""
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def _est_bytes(impl: str, cfg: BenchConfig, itemsize: int = 4) -> dict:
@@ -148,9 +167,10 @@ def _est_bytes(impl: str, cfg: BenchConfig, itemsize: int = 4) -> dict:
         # fwd: u (w1 out, act+GLU applied in-kernel) + y_pad (gate in-kernel)
         fwd = m_pad * g * row + m_pad * d * row
         # training fwd additionally writes h(/hg) in the same grid pass (no
-        # recompute GEMMs in bwd); bwd: dy_pad + x_pad (the streamed gather
-        # kernel's tile-aligned outputs) + t0 + dx_pad
-        bwd = (n_w1 * m_pad * g + 2 * m_pad * d + m_pad * g + m_pad * d) * row
+        # recompute GEMMs in bwd); bwd is gather-free at the HBM level — dy
+        # and x stream straight from the unsorted arrays, so only t0, the
+        # elementwise dh(/dhg) and dx_pad round-trip through HBM.
+        bwd = (n_w1 * m_pad * g + m_pad * g + m_pad * d) * row
     elif impl in ("pallas", "pallas_interpret"):
         # fwd: gathered xs + x_pad scatter + per-GEMM (pad in, out, unpad) +
         # act + GLU mult + gate mult as separate XLA passes
@@ -167,6 +187,12 @@ def _est_bytes(impl: str, cfg: BenchConfig, itemsize: int = 4) -> dict:
     return {"fwd": int(fwd), "fwd_bwd": int(fwd + bwd)}
 
 
+def _dma_descriptors(cfg: BenchConfig, idx, gates) -> dict:
+    """DMA descriptor counts of the plan at the routing that was timed."""
+    plan = ops.make_moe_plan(idx, gates, cfg.n_tokens, cfg.n_experts)
+    return ops.plan_dma_stats(plan, cfg.n_tokens)
+
+
 def _bench_config(cfg: BenchConfig, iters: int, with_bwd: bool) -> dict:
     args = _setup(cfg)
     results = {}
@@ -178,6 +204,19 @@ def _bench_config(cfg: BenchConfig, iters: int, with_bwd: bool) -> dict:
             probe = lambda *a: f(*a).astype(jnp.float32).sum()
             grad = jax.jit(jax.grad(probe, argnums=(0, 2, 3, 4, 5)))
             entry["fwd_bwd_us"] = round(_time(grad, args, iters), 1)
+            # Backward-only: time the vjp cotangent pull directly (the fwd
+            # runs once, outside the timed loop). Subtracting fwd_us from
+            # fwd_bwd_us instead would difference two independently noisy
+            # timings of DIFFERENT jitted programs (the grad's forward also
+            # writes save_preact outputs) — too flaky to CI-gate.
+            idxv = args[1]
+            _, vjp = jax.vjp(
+                lambda xf, gates, w1, w1g, w2:
+                    probe(xf, idxv, gates, w1, w1g, w2),
+                *(args[i] for i in (0, 2, 3, 4, 5)))
+            bwd_fn = jax.jit(lambda ct: vjp(ct))
+            entry["bwd_us"] = round(
+                _time(bwd_fn, (jnp.ones((), jnp.float32),), iters), 1)
         results[impl] = entry
     speedup = {"fwd": round(results["pallas"]["fwd_us"]
                             / max(results["pallas_fused"]["fwd_us"], 1e-9), 3)}
@@ -185,12 +224,21 @@ def _bench_config(cfg: BenchConfig, iters: int, with_bwd: bool) -> dict:
         speedup["fwd_bwd"] = round(
             results["pallas"]["fwd_bwd_us"]
             / max(results["pallas_fused"]["fwd_bwd_us"], 1e-9), 3)
+        # backward-only: the streamed gather-free dW/dX path in isolation
+        speedup["bwd"] = round(
+            results["pallas"]["bwd_us"]
+            / max(results["pallas_fused"]["bwd_us"], 1e-9), 3)
     return {"config": cfg._asdict(), "results": results,
-            "fused_speedup_vs_pallas": speedup}
+            "fused_speedup_vs_pallas": speedup,
+            "dma_descriptors": _dma_descriptors(cfg, args[1], args[2])}
 
 
 def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
-    base = _bench_config(BASE, iters, with_bwd=True)
+    # The CI-gated speedup ratios come from the base config, whose timed
+    # programs are all ms-scale: floor its sample count so the min-of-N
+    # estimator reliably sees an uncontended call on a shared host (~1s of
+    # extra wall clock total, vs compile time in the tens of seconds).
+    base = _bench_config(BASE, max(iters, 15), with_bwd=True)
     large_cfg = _large_n_config()
     # past the old residency boundary: fwd-only + few iters (interpret-mode
     # calls here are ~100x the base config's work per call)
@@ -201,6 +249,7 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
                    "note": "pallas impls run in interpret mode off-TPU"},
         "results": base["results"],
         "fused_speedup_vs_pallas": base["fused_speedup_vs_pallas"],
+        "dma_descriptors": base["dma_descriptors"],
         "large_n": {**large,
                     "note": "token count past the retired whole-x VMEM "
                             "boundary; streamed row-DMA gather territory"},
@@ -211,14 +260,18 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
             f"est_bytes={r['est_intermediate_bytes']['fwd']}"
             for impl, r in base["results"].items()]
     rows += [f"cvmm/{impl}_fwd_bwd,{r['fwd_bwd_us']},"
-             f"est_bytes={r['est_intermediate_bytes']['fwd_bwd']}"
+             f"est_bytes={r['est_intermediate_bytes']['fwd_bwd']};"
+             f"bwd_us={r['bwd_us']}"
              for impl, r in base["results"].items()]
     rows += [f"cvmm/large_n{large_cfg.n_tokens}/{impl}_fwd,{r['fwd_us']},"
              f"est_bytes={r['est_intermediate_bytes']['fwd']}"
              for impl, r in large["results"].items()]
     rows.append(
-        f"# wrote {out_path}; fused/unfused fwd+bwd speedup "
-        f"{payload['fused_speedup_vs_pallas']['fwd_bwd']}x; large-N "
+        f"# wrote {out_path}; fused/unfused speedups fwd+bwd "
+        f"{payload['fused_speedup_vs_pallas']['fwd_bwd']}x / bwd-only "
+        f"{payload['fused_speedup_vs_pallas']['bwd']}x; DMA batching "
+        f"{payload['dma_descriptors']['batching_factor']}x (base) / "
+        f"{large['dma_descriptors']['batching_factor']}x (large-N); large-N "
         f"(n={large_cfg.n_tokens}) fwd speedup "
         f"{large['fused_speedup_vs_pallas']['fwd']}x")
     return rows

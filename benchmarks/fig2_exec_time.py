@@ -93,9 +93,22 @@ def run():
         us_s = time_layer(lambda p, x: apply_moe(p, x, lcfg), lp, xl, iters=2)
     finally:
         kops.set_default_impl(None)
+    # time_layer measures fwd+bwd, so this row tracks the gather-free streamed
+    # backward too; also report run-batched DMA descriptor counts vs the
+    # retired one-copy-per-row scheme. The timed run's routing lives inside
+    # apply_moe, so the counts come from a same-shape PROBE plan (uniform
+    # random K=1 routing) — representative of the token/expert geometry, not
+    # the exact timed selection.
+    probe_idx = jax.random.randint(jax.random.PRNGKey(3), (n_large, 1), 0,
+                                   lcfg.n_experts)
+    plan = kops.make_moe_plan(probe_idx, jnp.ones((n_large, 1)), n_large,
+                              lcfg.n_experts)
+    dma = kops.plan_dma_stats(plan, n_large)
     rows.append(csv_row(
         f"fig2/moe_sort_fused_stream_n{n_large}", us_s,
-        f"past_whole_x_budget=1;ratio_vs_sort={us_s/us_u:.2f}"))
+        f"past_whole_x_budget=1;fwd_bwd=1;ratio_vs_sort={us_s/us_u:.2f};"
+        f"probe_dma_descriptors={dma['run_batched']};"
+        f"probe_dma_per_row={dma['per_row']}"))
     return rows
 
 

@@ -92,7 +92,7 @@ def init_moe(key, d_model: int, cfg: FFNConfig, n_layers: int,
 
 
 def _expert_ffn(cfg: FFNConfig, h_pre, h_gate):
-    act = act_fn(cfg.activation if cfg.kind != "sigma_moe" else cfg.activation)
+    act = act_fn(cfg.activation)
     u = act(h_pre)
     if cfg.glu_experts:
         u = u * h_gate
@@ -152,6 +152,14 @@ def _apply_sort(params: Dict, xf: jax.Array, cfg: FFNConfig, info: SelectionInfo
     k = cfg.k
     impl = kops.default_impl()
 
+    if (impl.startswith("pallas")
+            and not kops.pallas_supported(d, cfg.expert_size, xf.dtype)):
+        # Even the unfused kernels cannot tile this d_model/expert_size into
+        # VMEM (_pick_tn returns None and the kernels raise rather than
+        # compile a VMEM-exhausting tn=128): fall back to XLA's grouped
+        # matmul instead of failing at trace time.
+        impl = "ragged"
+
     if impl.startswith("pallas"):
         w1 = params["we1"].astype(xf.dtype)
         w2 = params["we2"].astype(xf.dtype)
@@ -187,13 +195,16 @@ def _apply_sort(params: Dict, xf: jax.Array, cfg: FFNConfig, info: SelectionInfo
     x_sorted = xf[tok[perm]]                              # (N*K, d) gathered rows
     group_sizes = jnp.bincount(e_sorted, length=e)        # (E,)
 
-    h = kops.cvmm(x_sorted, group_sizes, params["we1"].astype(xf.dtype))
+    h = kops.cvmm(x_sorted, group_sizes, params["we1"].astype(xf.dtype),
+                  impl=impl)
     if cfg.glu_experts:
-        hg = kops.cvmm(x_sorted, group_sizes, params["we1g"].astype(xf.dtype))
+        hg = kops.cvmm(x_sorted, group_sizes, params["we1g"].astype(xf.dtype),
+                       impl=impl)
     else:
         hg = None
     u = _expert_ffn(cfg, h, hg)
-    y_sorted = kops.cvmm(u, group_sizes, params["we2"].astype(xf.dtype))
+    y_sorted = kops.cvmm(u, group_sizes, params["we2"].astype(xf.dtype),
+                         impl=impl)
     y_sorted = y_sorted * g_flat[perm][:, None].astype(y_sorted.dtype)
 
     out = jnp.zeros_like(xf)
@@ -289,8 +300,9 @@ def _apply_shard_map(params: Dict, xf: jax.Array, cfg: FFNConfig,
 
     cap = _capacity(n // n_shards, cfg.k, e, cfg.capacity_factor)
 
-    def local(xl, idxl, gatesl, w1, w1g, w2):
-        # xl: (n_local, d); w1: (E/mp, d, g)
+    def local(xl, idxl, gatesl, w1, w2, w1g=None):
+        # xl: (n_local, d); w1: (E/mp, d, g); w1g only present with GLU —
+        # the non-GLU path neither ships nor multiplies a dummy gate weight.
         infol = SelectionInfo(probs=jnp.zeros((xl.shape[0], e), xl.dtype),
                               sel=jnp.zeros((xl.shape[0], e), xl.dtype),
                               idx=idxl, gates=gatesl)
@@ -309,15 +321,14 @@ def _apply_shard_map(params: Dict, xf: jax.Array, cfg: FFNConfig,
 
     tok_spec = P(all_axes, None)
     w_spec = P("model", None, None)
-    w1 = params["we1"].astype(xf.dtype)
-    w2 = params["we2"].astype(xf.dtype)
-    w1g = (params["we1g"].astype(xf.dtype) if cfg.glu_experts
-           else jnp.zeros((e, 1, 1), xf.dtype))
+    weights = (params["we1"].astype(xf.dtype), params["we2"].astype(xf.dtype))
+    if cfg.glu_experts:
+        weights += (params["we1g"].astype(xf.dtype),)
     y, dropped = _shard_map(
         local, mesh=mesh,
-        in_specs=(tok_spec, tok_spec, tok_spec, w_spec, w_spec, w_spec),
+        in_specs=(tok_spec,) * 3 + (w_spec,) * len(weights),
         out_specs=(tok_spec, P()),
-    )(xf, info.idx, info.gates, w1, w1g, w2)
+    )(xf, info.idx, info.gates, *weights)
     return y, dropped
 
 

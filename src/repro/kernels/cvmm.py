@@ -11,6 +11,11 @@ ops.py computes this layout ONCE per MoE call into a ``CvmmPlan``:
   ``row_src``     (M_pad,)    source row in the *unsorted* activations for each
                               padded slot; slack slots hold the sentinel N (one
                               past the last row) so XLA-side scatters drop them
+  ``run_start``   (M_pad,)    per-tile DMA chunk table: in-tile slot where
+  ``run_len``     (M_pad,)    chunk j of tile t starts, and its length (0 =
+                              unused entry); see ops._plan_runs
+  ``run_off``     (M_pad/TM*9,) per-tile size-class boundaries into that
+                              table (chunks are grouped largest-class first)
   ``tile_expert`` (M_pad/TM,) row-tile index -> expert id (non-decreasing)
   ``gate_tiles``  (M_pad/TM, TM) float32 gate per padded slot, 0 on slack
 
@@ -20,41 +25,59 @@ shared-memory reuse of the sorted expert matrix with Mosaic-scheduled DMA of one
 (K, TN) weight tile per grid step. The plan is threaded through forward AND
 backward via custom_vjp residuals, so backward never re-derives the layout.
 
-Unfused kernels (building blocks, also the backward pass of the fused path)
+Unfused kernels (building blocks, also the backward pass of the unfused path)
   cvmm_pallas     out[t] = x[t] @ w[tile_expert[t]]        grid (m_tiles, n_tiles)
   cvmm_dw_pallas  dw[e]  = sum_{t: expert(t)=e} x[t]^T g[t] grid (k, n, m); m
                   innermost — tile_expert is non-decreasing, so output-block
                   revisits are consecutive and accumulation is legal on TPU.
 
-Fused forward pipeline (one HBM round-trip per matmul, nothing else)
+Run-batched row-DMA pipeline (shared by every streamed kernel below)
+  ``row_src`` alone would force one ``make_async_copy`` per row (TM
+  descriptors per tile). The plan therefore carries a per-tile chunk table
+  (``run_start``/``run_len``/``run_off``, built by ops._plan_runs): maximal
+  contiguous ``row_src`` runs, greedily decomposed into power-of-two chunks
+  because DMA copy shapes must be static. Chunks are grouped by size class
+  (``run_off`` boundaries), so ``_gather_issue`` runs one dynamic-bound loop
+  per static class in ``_RUN_SIZES`` and issues ONE copy per chunk — no
+  per-entry size dispatch, and total loop iterations == #chunks. A fully
+  contiguous tile (K=1, skewed routing) is 1 descriptor instead of 128; the
+  worst case (no two sources adjacent) degrades to the old per-row count.
+  Slack slots belong to no chunk and keep the zero fill before the DMAs.
+
+Fused/streamed pipeline (one HBM round-trip per matmul, nothing else)
   cvmm_fused_w1_pallas   gather + GEMM + activation(/GLU) epilogue. The
       unsorted activations stay in HBM (``pltpu.ANY`` memory space) — the
       kernel never requires whole-array VMEM residency, so it scales to
-      production token counts. ``row_src`` is scalar-prefetched and drives a
-      double-buffered row-DMA pipeline: on the first N-tile of row tile ``i``
-      the kernel waits for tile ``i``'s gather (issued one tile earlier into
-      one of two (TM, K) VMEM scratch buffers via ``pltpu.make_async_copy``)
-      and immediately starts tile ``i+1``'s gather into the other buffer, so
-      the HBM row reads overlap the MXU work of the current tile. Slack slots
-      (sentinel ``row_src``) are *skipped*, not clamped-gathered: their scratch
-      rows are zeroed, so slack outputs are finite and killed downstream by the
-      zero gate + scatter-drop. With GLU both W1 and W1g blocks are read in the
-      same grid pass and u = act(x@w1) * (x@w1g) is written directly — the
-      materialized (N*K, d) gather, the x_pad scatter, and the standalone
-      activation pass all disappear.
+      production token counts. The chunk table is scalar-prefetched and
+      drives a double-buffered DMA pipeline: on the first N-tile of row tile
+      ``i`` the kernel waits for tile ``i``'s gather (issued one tile earlier
+      into one of two (TM, K) VMEM scratch buffers) and immediately starts
+      tile ``i+1``'s gather into the other buffer, so the HBM reads overlap
+      the MXU work of the current tile. Slack outputs are finite (zero-filled
+      scratch) and killed downstream by the zero gate + scatter-drop. With
+      GLU both W1 and W1g blocks are read in the same grid pass and
+      u = act(x@w1) * (x@w1g) is written directly. The backward pass reuses
+      this kernel with ``act_name="identity"`` for t0 = gather(dy) @ w2^T —
+      the cotangent rows also stream straight out of HBM.
   cvmm_fused_w2_pallas   GEMM + per-row gate multiply in the epilogue, so
       ``y_sorted * g_flat[perm]`` is never a separate XLA pass.
-  cvmm_gather_rows_pallas  the same double-buffered row-DMA pipeline as a bare
-      gather: unsorted HBM rows -> tile-aligned (M_pad, K) layout, zeros on
-      slack. The backward pass uses it to materialize its (single) gathered
-      operands with the streamed plan instead of an XLA-level take.
+  cvmm_dw_streamed_pallas  dw[e] = sum x^T g with ONE operand streamed from
+      the unsorted HBM array through the same pipeline (grid (n, m), m
+      innermost; the stream restarts per n-pass). Backward's dW1/dW1g stream
+      the activations; dW2 streams the cotangent and fuses the ``dy * gate``
+      multiply into the epilogue — no tile-aligned (M_pad, K) gather copy of
+      either operand is ever materialized in HBM.
+  cvmm_gather_rows_pallas  the pipeline as a bare gather: unsorted HBM rows
+      -> tile-aligned (M_pad, K) layout, zeros on slack. No longer on the
+      training path (backward streams instead); kept as the streamed-gather
+      primitive and its direct test surface.
 
 VMEM working set per grid step: two (TM, K) gather buffers + the (pipelined)
-weight and output tiles — independent of the activation row count
-(``fused_w1_tn`` does the accounting; ``ops.fused_supported`` now gates only
-on this tile-level residency).
+weight/operand and output tiles — independent of the activation row count
+(``fused_w1_tn`` / ``streamed_dw_tile`` do the accounting; ``ops.fused_supported``
+gates on this tile-level residency only, forward AND backward kernels).
 
-dX reuses the forward kernel with w transposed.
+dX on tile-aligned operands reuses cvmm_pallas with w transposed.
 """
 from __future__ import annotations
 
@@ -78,8 +101,11 @@ N_BUFFERS = 2       # gather scratch slots (double buffering)
 FUSIBLE_ACTIVATIONS = ("relu", "gelu", "silu", "identity")
 
 
-def _pick_tn(k_pad: int, n_pad: int, bytes_per_el: int) -> int:
-    """Largest N tile (multiple of 128, <= n_pad) whose working set fits VMEM."""
+def _pick_tn(k_pad: int, n_pad: int, bytes_per_el: int):
+    """Largest N tile (multiple of 128, <= n_pad) whose working set fits VMEM,
+    or None when even tn=128 does not fit — same contract as ``fused_w1_tn``:
+    callers raise (or gate via ``ops.fused_supported``) instead of compiling a
+    kernel that exhausts VMEM."""
     for tn in (512, 384, 256, 128):
         if tn > n_pad:
             continue
@@ -88,7 +114,15 @@ def _pick_tn(k_pad: int, n_pad: int, bytes_per_el: int) -> int:
         ws = TM * k_pad * bytes_per_el + k_pad * tn * bytes_per_el + TM * tn * 4
         if ws <= VMEM_BUDGET:
             return tn
-    return 128
+    return None
+
+
+def _require_tn(tn, kernel: str, k_pad: int):
+    if tn is None:
+        raise ValueError(
+            f"{kernel}: no N tile fits the VMEM budget for K_pad={k_pad}; "
+            f"gate calls with ops.fused_supported or use an unfused impl")
+    return tn
 
 
 def fused_w1_tn(k_pad: int, g_pad: int, bytes_per_el: int,
@@ -111,6 +145,24 @@ def fused_w1_tn(k_pad: int, g_pad: int, bytes_per_el: int,
                             + n_out * TM * tn * max(bytes_per_el, 4))
         if ws <= VMEM_BUDGET:
             return tn
+    return None
+
+
+def streamed_dw_tile(stream_w_pad: int, block_w_pad: int, bytes_per_el: int):
+    """Largest tile over the BLOCKED operand's width for the streamed dW
+    kernel, or None when nothing fits.
+
+    Working set: two (TM, W_stream) gather scratch buffers, plus the blocked
+    (TM, t) operand tile and the (W_stream, t) float32 output block at 2x for
+    Mosaic's pipeline double-buffering. As with ``fused_w1_tn``, the streamed
+    operand's row count never appears — it lives in HBM."""
+    scratch = N_BUFFERS * TM * stream_w_pad * bytes_per_el
+    for t in (512, 384, 256, 128):
+        if t > block_w_pad or block_w_pad % t:
+            continue
+        ws = scratch + 2 * (TM * t * bytes_per_el + stream_w_pad * t * 4)
+        if ws <= VMEM_BUDGET:
+            return t
     return None
 
 
@@ -149,7 +201,8 @@ def cvmm_pallas(x_pad: jax.Array, tile_expert: jax.Array, w: jax.Array,
     m_pad, k_pad = x_pad.shape
     e, k_w, n_pad = w.shape
     assert k_w == k_pad and m_pad % TM == 0 and k_pad % LANE == 0 and n_pad % LANE == 0
-    tn = _pick_tn(k_pad, n_pad, x_pad.dtype.itemsize)
+    tn = _require_tn(_pick_tn(k_pad, n_pad, x_pad.dtype.itemsize),
+                     "cvmm_pallas", k_pad)
     grid = (m_pad // TM, n_pad // tn)
 
     return pl.pallas_call(
@@ -199,8 +252,10 @@ def cvmm_dw_pallas(x_pad: jax.Array, tile_expert: jax.Array, g_pad: jax.Array,
     m_pad, k_pad = x_pad.shape
     _, n_pad = g_pad.shape
     assert m_pad % TM == 0 and k_pad % LANE == 0 and n_pad % LANE == 0
-    tk = _pick_tn(TM, k_pad, x_pad.dtype.itemsize)
-    tn = _pick_tn(TM, n_pad, g_pad.dtype.itemsize)
+    tk = _require_tn(_pick_tn(TM, k_pad, x_pad.dtype.itemsize),
+                     "cvmm_dw_pallas", TM)
+    tn = _require_tn(_pick_tn(TM, n_pad, g_pad.dtype.itemsize),
+                     "cvmm_dw_pallas", TM)
     grid = (k_pad // tk, n_pad // tn, m_pad // TM)
 
     return pl.pallas_call(
@@ -225,76 +280,105 @@ def cvmm_dw_pallas(x_pad: jax.Array, tile_expert: jax.Array, g_pad: jax.Array,
 # Fused forward kernels
 # ---------------------------------------------------------------------------
 
-def _gather_issue(t, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows: int):
-    """Zero slot ``t % N_BUFFERS`` and start the row DMAs for row tile ``t``.
+# Static DMA chunk sizes (copy shapes cannot be dynamic): the greedy
+# power-of-two decomposition of a maximal contiguous row_src run, largest
+# first. A full tile is one size-TM descriptor; isolated rows are size 1.
+_RUN_SIZES = tuple(1 << b for b in range(TM.bit_length() - 1, -1, -1))
 
-    One ``make_async_copy`` per real row, HBM -> VMEM scratch; slack slots
-    (sentinel ``row_src`` >= n_rows) are *skipped*, so their scratch rows keep
-    the zeros written here — the downstream GEMM sees finite values and the
-    zero gate / scatter-drop kills the result. All copies of a tile signal the
-    slot's semaphore; ``_gather_wait`` reconstructs the same descriptors."""
+
+def _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
+              sem_ref, slot, *, wait: bool):
+    """Issue (or wait for) the run-batched DMA chunks of row tile ``t``.
+
+    The plan's chunk table (ops._plan_runs) batches each maximal contiguous
+    ``row_src`` run into power-of-two chunks (DMA copy shapes must be
+    static): ``run_start[t*TM + j]`` is chunk j's in-tile destination slot,
+    and the chunks are grouped by size class with per-tile boundaries in
+    ``run_off`` — class ci's chunks occupy entries [run_off[t*9+ci],
+    run_off[t*9+ci+1]). The kernel therefore runs one dynamic-bound loop per
+    STATIC size class and issues ONE ``make_async_copy`` per chunk, with no
+    per-entry size dispatch: total loop iterations == #chunks, versus one
+    copy (and one predicate) per row before run batching. Slack slots are
+    covered by no chunk and keep the zeros written by ``_gather_issue``. All
+    chunks of a tile signal the slot's semaphore; the wait pass reconstructs
+    identical descriptors."""
+    cbase = t * (len(_RUN_SIZES) + 1)
+    for ci, s in enumerate(_RUN_SIZES):
+        # A chunk spans s consecutive SOURCE rows, so classes larger than the
+        # HBM operand's row count can never occur — skipping them keeps every
+        # traced slice shape legal against the operand.
+        if s > x_hbm.shape[0]:
+            continue
+
+        def body(j, _, s=s):
+            off = run_start_ref[t * TM + j]
+            src = row_src_ref[t * TM + off]
+            cp = pltpu.make_async_copy(x_hbm.at[pl.ds(src, s), :],
+                                       xs_ref.at[slot, pl.ds(off, s), :],
+                                       sem_ref.at[slot])
+            cp.wait() if wait else cp.start()
+            return 0
+
+        jax.lax.fori_loop(run_off_ref[cbase + ci], run_off_ref[cbase + ci + 1],
+                          body, 0)
+
+
+def _gather_issue(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
+                  sem_ref):
+    """Zero slot ``t % N_BUFFERS`` and start the run-batched DMAs of tile ``t``."""
     slot = jax.lax.rem(t, N_BUFFERS)
     xs_ref[slot] = jnp.zeros(xs_ref.shape[1:], xs_ref.dtype)
-
-    def body(r, _):
-        src = row_src_ref[t * TM + r]
-
-        @pl.when(src < n_rows)
-        def _():
-            pltpu.make_async_copy(x_hbm.at[pl.ds(src, 1), :],
-                                  xs_ref.at[slot, pl.ds(r, 1), :],
-                                  sem_ref.at[slot]).start()
-        return 0
-
-    jax.lax.fori_loop(0, TM, body, 0)
+    _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
+              sem_ref, slot, wait=False)
 
 
-def _gather_wait(t, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows: int):
-    """Wait for every row DMA issued by ``_gather_issue`` for row tile ``t``."""
+def _gather_wait(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
+                 sem_ref):
+    """Wait for every DMA chunk issued by ``_gather_issue`` for tile ``t``."""
     slot = jax.lax.rem(t, N_BUFFERS)
-
-    def body(r, _):
-        src = row_src_ref[t * TM + r]
-
-        @pl.when(src < n_rows)
-        def _():
-            pltpu.make_async_copy(x_hbm.at[pl.ds(src, 1), :],
-                                  xs_ref.at[slot, pl.ds(r, 1), :],
-                                  sem_ref.at[slot]).wait()
-        return 0
-
-    jax.lax.fori_loop(0, TM, body, 0)
+    _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
+              sem_ref, slot, wait=True)
 
 
-def _stream_tile(i, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows: int):
-    """Double-buffered gather step for row tile ``i`` (grid dim 0, sequential).
+def _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
+                 sem_ref, *, axis: int = 0):
+    """Double-buffered gather step for row tile ``i`` (grid dim ``axis``,
+    sequential and innermost).
 
-    Waits for tile ``i``'s rows (issued one tile earlier; warm-up issues tile 0
-    inline) and immediately starts tile ``i+1``'s DMAs into the other scratch
-    slot, so the HBM reads of the next tile overlap this tile's MXU work.
-    Returns the slot holding tile ``i``."""
-    m_tiles = pl.num_programs(0)
+    Waits for tile ``i``'s chunks (issued one tile earlier; warm-up issues
+    tile 0 inline) and immediately starts tile ``i+1``'s DMAs into the other
+    scratch slot, so the HBM reads of the next tile overlap this tile's MXU
+    work. Returns the slot holding tile ``i``. Kernels whose row-tile loop is
+    an inner grid dimension (the streamed dW kernels) re-enter at i == 0 once
+    per outer pass: the warm-up re-issues tile 0 and the last tile issues no
+    prefetch, so no DMA is left in flight across pass boundaries."""
+    m_tiles = pl.num_programs(axis)
 
     @pl.when(i == 0)
     def _warmup():
-        _gather_issue(0, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+        _gather_issue(0, row_src_ref, run_start_ref, run_off_ref, x_hbm,
+                      xs_ref, sem_ref)
 
-    _gather_wait(i, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+    _gather_wait(i, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
+                 sem_ref)
 
     @pl.when(i + 1 < m_tiles)
     def _prefetch_next():
-        _gather_issue(i + 1, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+        _gather_issue(i + 1, row_src_ref, run_start_ref, run_off_ref, x_hbm,
+                      xs_ref, sem_ref)
 
     return jax.lax.rem(i, N_BUFFERS)
 
 
-def _fused_w1_body(row_src_ref, x_hbm, w1_ref, w1g_ref, o_u_ref, o_h_ref,
-                   o_hg_ref, xs_ref, sem_ref, *, act_name: str, n_rows: int):
+def _fused_w1_body(row_src_ref, run_start_ref, run_off_ref, x_hbm, w1_ref,
+                   w1g_ref, o_u_ref, o_h_ref, o_hg_ref, xs_ref, sem_ref,
+                   *, act_name: str):
     i, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
     def _():
-        _stream_tile(i, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+        _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm,
+                     xs_ref, sem_ref)
     xt = xs_ref[jax.lax.rem(i, N_BUFFERS)]
     h = jnp.dot(xt, w1_ref[0], preferred_element_type=jnp.float32)
     u = act_fn(act_name)(h)
@@ -309,23 +393,24 @@ def _fused_w1_body(row_src_ref, x_hbm, w1_ref, w1g_ref, o_u_ref, o_h_ref,
     o_u_ref[...] = u.astype(o_u_ref.dtype)
 
 
-def _k_w1(rs, te, x, w1, o_u, xs, sem, **kw):
-    _fused_w1_body(rs, x, w1, None, o_u, None, None, xs, sem, **kw)
+def _k_w1(rs, rst, rl, te, x, w1, o_u, xs, sem, **kw):
+    _fused_w1_body(rs, rst, rl, x, w1, None, o_u, None, None, xs, sem, **kw)
 
 
-def _k_w1_save(rs, te, x, w1, o_u, o_h, xs, sem, **kw):
-    _fused_w1_body(rs, x, w1, None, o_u, o_h, None, xs, sem, **kw)
+def _k_w1_save(rs, rst, rl, te, x, w1, o_u, o_h, xs, sem, **kw):
+    _fused_w1_body(rs, rst, rl, x, w1, None, o_u, o_h, None, xs, sem, **kw)
 
 
-def _k_w1_glu(rs, te, x, w1, w1g, o_u, xs, sem, **kw):
-    _fused_w1_body(rs, x, w1, w1g, o_u, None, None, xs, sem, **kw)
+def _k_w1_glu(rs, rst, rl, te, x, w1, w1g, o_u, xs, sem, **kw):
+    _fused_w1_body(rs, rst, rl, x, w1, w1g, o_u, None, None, xs, sem, **kw)
 
 
-def _k_w1_glu_save(rs, te, x, w1, w1g, o_u, o_h, o_hg, xs, sem, **kw):
-    _fused_w1_body(rs, x, w1, w1g, o_u, o_h, o_hg, xs, sem, **kw)
+def _k_w1_glu_save(rs, rst, rl, te, x, w1, w1g, o_u, o_h, o_hg, xs, sem, **kw):
+    _fused_w1_body(rs, rst, rl, x, w1, w1g, o_u, o_h, o_hg, xs, sem, **kw)
 
 
 def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
+                         run_start: jax.Array, run_off: jax.Array,
                          tile_expert: jax.Array, w1: jax.Array,
                          w1g: jax.Array | None, *, act_name: str,
                          save_preact: bool = False,
@@ -333,12 +418,16 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
     """Streamed gather-fused grouped GEMM with activation(/GLU) epilogue.
 
     x (N_rows, K_pad) — the UNSORTED activations, left in HBM (``pltpu.ANY``)
-    and streamed row-by-row through a double-buffered async-copy pipeline (see
-    ``_stream_tile``); the row count is unconstrained — no multiple-of-8
+    and streamed through the run-batched double-buffered async-copy pipeline
+    (see ``_stream_tile``); the row count is unconstrained — no multiple-of-8
     padding, no whole-array VMEM residency. row_src (M_pad,) int32 maps padded
-    slots to rows of x (sentinel >= N_rows on slack; those rows are skipped and
-    zero-filled); w1/w1g (E, K_pad, G_pad). Returns u (M_pad, G_pad) in the
-    tile-aligned sorted layout, already activated (and gated when w1g given).
+    slots to rows of x (sentinel >= N_rows on slack; those rows get no DMA and
+    stay zero-filled); run_start (M_pad,) / run_off (M_pad//TM*9,) int32 are
+    the per-tile DMA chunk table (ops._plan_runs); w1/w1g (E, K_pad, G_pad).
+    Returns u
+    (M_pad, G_pad) in the tile-aligned sorted layout, already activated (and
+    gated when w1g given). The backward pass reuses this kernel with
+    ``act_name="identity"`` to stream-gather ∘ GEMM the incoming cotangent.
 
     ``save_preact=True`` (training: the custom_vjp forward rule) additionally
     writes the pre-activations h (and hg with GLU) in the same grid pass, so
@@ -348,6 +437,8 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
     m_pad = row_src.shape[0]
     assert k_w == k_pad and m_pad % TM == 0
     assert k_pad % LANE == 0 and g_pad % LANE == 0
+    assert run_start.shape == (m_pad,)
+    assert run_off.shape == ((m_pad // TM) * (len(_RUN_SIZES) + 1),)
     n_weights = 2 if w1g is not None else 1
     n_out = (1 + n_weights) if save_preact else 1
     tn = fused_w1_tn(k_pad, g_pad, x.dtype.itemsize, n_weights, n_out)
@@ -357,23 +448,24 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
             f"{k_pad}; gate calls with ops.fused_supported")
     grid = (m_pad // TM, g_pad // tn)
 
-    w_spec = pl.BlockSpec((1, k_pad, tn), lambda i, j, rs, te: (te[i], 0, j))
-    o_spec = pl.BlockSpec((TM, tn), lambda i, j, rs, te: (i, j))
+    w_spec = pl.BlockSpec((1, k_pad, tn),
+                          lambda i, j, rs, rst, rl, te: (te[i], 0, j))
+    o_spec = pl.BlockSpec((TM, tn), lambda i, j, rs, rst, rl, te: (i, j))
     o_shape = jax.ShapeDtypeStruct((m_pad, g_pad), x.dtype)
     in_specs = [pl.BlockSpec(memory_space=pltpu.ANY), w_spec]
-    operands = [row_src, tile_expert, x, w1]
+    operands = [row_src, run_start, run_off, tile_expert, x, w1]
     if w1g is not None:
         in_specs.append(w_spec)
         operands.append(w1g)
         kernel = _k_w1_glu_save if save_preact else _k_w1_glu
     else:
         kernel = _k_w1_save if save_preact else _k_w1
-    kernel = functools.partial(kernel, act_name=act_name, n_rows=n_rows)
+    kernel = functools.partial(kernel, act_name=act_name)
 
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=4,
             grid=grid,
             in_specs=in_specs,
             out_specs=[o_spec] * n_out,
@@ -388,32 +480,34 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
     return out[0] if n_out == 1 else tuple(out)
 
 
-def _gather_rows_kernel(row_src_ref, x_hbm, o_ref, xs_ref, sem_ref,
-                        *, n_rows: int):
+def _gather_rows_kernel(row_src_ref, run_start_ref, run_off_ref, x_hbm, o_ref,
+                        xs_ref, sem_ref):
     i = pl.program_id(0)
-    slot = _stream_tile(i, row_src_ref, x_hbm, xs_ref, sem_ref, n_rows)
+    slot = _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm,
+                        xs_ref, sem_ref)
     o_ref[...] = xs_ref[slot]
 
 
 def cvmm_gather_rows_pallas(x: jax.Array, row_src: jax.Array,
+                            run_start: jax.Array, run_off: jax.Array,
                             *, interpret: bool = False) -> jax.Array:
     """Streamed gather: unsorted HBM rows -> tile-aligned (M_pad, K_pad) copy.
 
-    The same double-buffered row-DMA pipeline as the fused w1 kernel, with the
-    scratch tile written straight to the blocked output (slack slots zero).
-    The backward pass uses this to materialize its gathered operands for the
-    dW / gather-transpose kernels with the SAME streamed plan as forward — the
-    unsorted array never needs whole-array VMEM residency there either."""
+    The same run-batched double-buffered DMA pipeline as the fused w1 kernel,
+    with the scratch tile written straight to the blocked output (slack slots
+    zero). No longer called by the fused backward pass — dW/dX stream their
+    operands in place — but kept as the bare streamed-gather primitive (and
+    the pipeline's direct test surface)."""
     n_rows, k_pad = x.shape
     m_pad = row_src.shape[0]
     assert m_pad % TM == 0 and k_pad % LANE == 0
     return pl.pallas_call(
-        functools.partial(_gather_rows_kernel, n_rows=n_rows),
+        _gather_rows_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=3,
             grid=(m_pad // TM,),
             in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
-            out_specs=pl.BlockSpec((TM, k_pad), lambda i, rs: (i, 0)),
+            out_specs=pl.BlockSpec((TM, k_pad), lambda i, rs, rst, rl: (i, 0)),
             scratch_shapes=[pltpu.VMEM((N_BUFFERS, TM, k_pad), x.dtype),
                             pltpu.SemaphoreType.DMA((N_BUFFERS,))],
         ),
@@ -421,7 +515,141 @@ def cvmm_gather_rows_pallas(x: jax.Array, row_src: jax.Array,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(row_src, x)
+    )(row_src, run_start, run_off, x)
+
+
+# ---------------------------------------------------------------------------
+# Streamed dW kernels (backward: no tile-aligned gather ever hits HBM)
+# ---------------------------------------------------------------------------
+
+def _dw_first(te_ref, m):
+    e_now = te_ref[m]
+    e_prev = te_ref[jnp.maximum(m - 1, 0)]
+    return jnp.logical_or(m == 0, e_now != e_prev)
+
+
+def _dw_accumulate(o_ref, acc, first):
+    @pl.when(first)
+    def _init():
+        o_ref[0] = acc
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        o_ref[0] += acc
+
+
+def _dw_stream_x_kernel(rs, rst, rl, te, x_hbm, g_ref, o_ref, xs_ref, sem_ref):
+    # grid (n_tiles, m_tiles), m innermost; the stream restarts per n pass.
+    m = pl.program_id(1)
+    slot = _stream_tile(m, rs, rst, rl, x_hbm, xs_ref, sem_ref, axis=1)
+    acc = jax.lax.dot_general(xs_ref[slot], g_ref[...],
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (K, tb)
+    _dw_accumulate(o_ref, acc, _dw_first(te, m))
+
+
+def _dw_stream_g_body(rs, rst, rl, g_hbm, x_ref, gate_ref, o_ref, gs_ref,
+                      sem_ref, te):
+    m = pl.program_id(1)
+    slot = _stream_tile(m, rs, rst, rl, g_hbm, gs_ref, sem_ref, axis=1)
+    gt = gs_ref[slot]
+    if gate_ref is not None:
+        gt = (gt.astype(jnp.float32) * gate_ref[0][:, None]).astype(gt.dtype)
+    acc = jax.lax.dot_general(x_ref[...], gt, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (tb, N)
+    _dw_accumulate(o_ref, acc, _dw_first(te, m))
+
+
+def _dw_stream_g_kernel(rs, rst, rl, te, g_hbm, x_ref, o_ref, gs_ref, sem_ref):
+    _dw_stream_g_body(rs, rst, rl, g_hbm, x_ref, None, o_ref, gs_ref, sem_ref,
+                      te)
+
+
+def _dw_stream_g_gate_kernel(rs, rst, rl, te, g_hbm, x_ref, gate_ref, o_ref,
+                             gs_ref, sem_ref):
+    _dw_stream_g_body(rs, rst, rl, g_hbm, x_ref, gate_ref, o_ref, gs_ref,
+                      sem_ref, te)
+
+
+def cvmm_dw_streamed_pallas(x: jax.Array, g: jax.Array, row_src: jax.Array,
+                            run_start: jax.Array, run_off: jax.Array,
+                            tile_expert: jax.Array, n_experts: int, *,
+                            stream_x: bool,
+                            gate_tiles: jax.Array | None = None,
+                            interpret: bool = False) -> jax.Array:
+    """dW (E, K_pad, N_pad) float32 with ONE operand streamed from unsorted HBM.
+
+    stream_x=True : ``x`` is the UNSORTED (N_rows, K_pad) activations, left in
+        HBM (``pltpu.ANY``) and gathered tile-by-tile through the run-batched
+        DMA pipeline; ``g`` (M_pad, N_pad) is tile-aligned and blocked
+        normally. (Backward's dW1/dW1g: activations never re-materialize.)
+    stream_x=False: ``g`` is the UNSORTED (N_rows, N_pad) cotangent in HBM;
+        ``x`` (M_pad, K_pad) is tile-aligned. ``gate_tiles`` (M_pad//TM, TM)
+        float32, if given, scales the streamed rows before the outer product —
+        backward's dW2 fuses the ``dy * gate`` multiply here instead of
+        materializing a gated copy. Slack slots stream as zeros either way.
+
+    Grid (blocked_w // tb, m_tiles) with the row-tile loop innermost:
+    ``tile_expert`` is non-decreasing, so output-block revisits stay
+    consecutive and accumulation is legal; the gather stream restarts on each
+    outer pass (the scratch only ever holds two row tiles)."""
+    assert gate_tiles is None or not stream_x
+    m_pad = row_src.shape[0]
+    if stream_x:
+        n_rows, k_pad = x.shape
+        mp_g, n_pad = g.shape
+        stream_w, block_w, sdtype = k_pad, n_pad, x.dtype
+        assert mp_g == m_pad
+    else:
+        mp_x, k_pad = x.shape
+        n_rows, n_pad = g.shape
+        stream_w, block_w, sdtype = n_pad, k_pad, g.dtype
+        assert mp_x == m_pad
+    assert m_pad % TM == 0 and k_pad % LANE == 0 and n_pad % LANE == 0
+    assert run_start.shape == (m_pad,)
+    assert run_off.shape == ((m_pad // TM) * (len(_RUN_SIZES) + 1),)
+    tb = streamed_dw_tile(stream_w, block_w, sdtype.itemsize)
+    if tb is None:
+        raise ValueError(
+            f"streamed dW tile working set exceeds VMEM budget for "
+            f"W_stream={stream_w}; gate calls with ops.fused_supported")
+    grid = (block_w // tb, m_pad // TM)
+    scratch = [pltpu.VMEM((N_BUFFERS, TM, stream_w), sdtype),
+               pltpu.SemaphoreType.DMA((N_BUFFERS,))]
+    blk_spec = pl.BlockSpec((TM, tb), lambda b, m, *s: (m, b))
+    if stream_x:
+        in_specs = [pl.BlockSpec(memory_space=pltpu.ANY), blk_spec]
+        operands = [row_src, run_start, run_off, tile_expert, x, g]
+        out_spec = pl.BlockSpec(
+            (1, k_pad, tb), lambda b, m, rs, rst, rl, te: (te[m], 0, b))
+        kernel = _dw_stream_x_kernel
+    else:
+        in_specs = [pl.BlockSpec(memory_space=pltpu.ANY), blk_spec]
+        operands = [row_src, run_start, run_off, tile_expert, g, x]
+        out_spec = pl.BlockSpec(
+            (1, tb, n_pad), lambda b, m, rs, rst, rl, te: (te[m], b, 0))
+        if gate_tiles is not None:
+            assert gate_tiles.shape == (m_pad // TM, TM)
+            in_specs.append(pl.BlockSpec((1, TM), lambda b, m, *s: (m, 0)))
+            operands.append(gate_tiles)
+            kernel = _dw_stream_g_gate_kernel
+        else:
+            kernel = _dw_stream_g_kernel
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            scratch_shapes=scratch,
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_experts, k_pad, n_pad), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
 
 
 def _fused_w2_kernel(tile_expert_ref, u_ref, w2_ref, gate_ref, o_ref):
@@ -441,7 +669,8 @@ def cvmm_fused_w2_pallas(u_pad: jax.Array, tile_expert: jax.Array,
     assert g_w == g_pad and m_pad % TM == 0
     assert g_pad % LANE == 0 and n_pad % LANE == 0
     assert gate_tiles.shape == (m_pad // TM, TM)
-    tn = _pick_tn(g_pad, n_pad, u_pad.dtype.itemsize)
+    tn = _require_tn(_pick_tn(g_pad, n_pad, u_pad.dtype.itemsize),
+                     "cvmm_fused_w2_pallas", g_pad)
     grid = (m_pad // TM, n_pad // tn)
 
     return pl.pallas_call(

@@ -11,11 +11,13 @@ Backends
                 count) with activation/GLU epilogue and a w2 kernel with the
                 gate multiply fused in. The plan is threaded through forward
                 and backward via custom_vjp residuals — no layout recompute,
-                no re-pad in backward, and the backward's gathers reuse the
-                same streamed row-DMA pipeline. Exposed at the MoE-MLP
-                granularity via ``moe_mlp_fused``; for the bare ``cvmm`` API it
-                degrades to the planned unfused path (a single GEMM has no
-                epilogue to fuse).
+                no re-pad in backward, and the backward is gather-free at the
+                HBM level: dW/dX stream their unsorted operands through the
+                same run-batched row-DMA pipeline instead of materializing
+                tile-aligned copies. Exposed at the MoE-MLP granularity via
+                ``moe_mlp_fused``; for the bare ``cvmm`` API it degrades to
+                the planned unfused path (a single GEMM has no epilogue to
+                fuse).
 "ragged"        jax.lax.ragged_dot — XLA's grouped matmul; differentiable; the
                 default on CPU and a correctness cross-check on TPU.
 "ref"           Pure-jnp one-hot oracle (kernels/ref.py), O(N*E) — tests only.
@@ -42,9 +44,10 @@ from jax import dtypes
 
 from ..common import act_fn, round_up
 from . import ref as refk
-from .cvmm import (FUSIBLE_ACTIVATIONS, LANE, TM, cvmm_dw_pallas,
-                   cvmm_fused_w1_pallas, cvmm_fused_w2_pallas,
-                   cvmm_gather_rows_pallas, cvmm_pallas, fused_w1_tn)
+from .cvmm import (FUSIBLE_ACTIVATIONS, LANE, TM, _pick_tn, _RUN_SIZES,
+                   cvmm_dw_pallas, cvmm_dw_streamed_pallas,
+                   cvmm_fused_w1_pallas, cvmm_fused_w2_pallas, cvmm_pallas,
+                   fused_w1_tn, streamed_dw_tile)
 
 _FORCED_IMPL: Optional[str] = None
 
@@ -79,6 +82,18 @@ class CvmmPlan(NamedTuple):
     group_sizes: jax.Array   # (E,) rows per expert
     new_pos: jax.Array       # (N*K,) tile-aligned slot of sorted row i
     row_src: jax.Array       # (M_pad,) source token row; sentinel N on slack
+    run_start: jax.Array     # (M_pad,) per-tile DMA chunk table (compacted):
+    run_len: jax.Array       #   entry j of tile t (flat t*TM+j) copies
+                             #   run_len[j] consecutive rows starting at
+                             #   row_src[t*TM + run_start[j]] into tile slots
+                             #   [run_start[j], +run_len[j]); 0 = unused.
+                             #   Lengths are static power-of-two classes
+                             #   (see _plan_runs / cvmm._RUN_SIZES).
+    run_off: jax.Array       # (M_pad//TM * 9,) per-tile size-class boundaries
+                             #   into that table: class ci's chunks sit at
+                             #   entries [run_off[t*9+ci], run_off[t*9+ci+1])
+                             #   — lets kernels loop per static class with no
+                             #   per-entry size dispatch.
     tile_expert: jax.Array   # (M_pad//TM,) row-tile -> expert id
     gate_tiles: jax.Array    # (M_pad//TM, TM) float32 gate per slot, 0 on slack
 
@@ -109,6 +124,66 @@ def _tile_layout(group_sizes: jax.Array, m: int, e: int):
     return new_pos, tile_expert, m_pad
 
 
+def _plan_runs(row_src: jax.Array, n_rows: int):
+    """Batch each tile's maximal contiguous ``row_src`` runs into DMA chunks.
+
+    Returns (run_start, run_len, run_off). run_start/run_len are (M_pad,)
+    int32: entry j of tile t (flat index t*TM + j) describes one HBM->VMEM
+    copy of ``run_len[t*TM+j]`` consecutive source rows starting at
+    ``row_src[t*TM + run_start[t*TM+j]]`` into the tile's slot range
+    [run_start, run_start + run_len). DMA copy shapes must be static, so each
+    maximal run is greedily decomposed into power-of-two chunks (the kernels
+    predicate on ``cvmm._RUN_SIZES``): a fully contiguous tile is ONE
+    descriptor, an isolated row is one size-1 descriptor — never more chunks
+    than the old one-DMA-per-row scheme. ``run_len == 0`` marks unused
+    entries; slack slots (sentinel ``row_src``) belong to no chunk and keep
+    the kernels' zero fill.
+
+    Each tile's chunk entries are grouped by size class (largest first, source
+    order preserved within a class, unused entries last), and ``run_off``
+    ((M_pad//TM)*(len(_RUN_SIZES)+1),) int32 carries the per-tile class
+    boundaries: class ci's chunks occupy entries [run_off[t*C+ci],
+    run_off[t*C+ci+1]) with C = len(_RUN_SIZES)+1. The kernels therefore run
+    one dynamic-bound loop per STATIC size class — total iterations == #chunks
+    — instead of dispatching on run_len per entry (run_len itself is kept in
+    the plan for tests/telemetry; the kernels never read it)."""
+    src = row_src.reshape(-1, TM).astype(jnp.int32)
+    n_tiles = src.shape[0]
+    valid = src < n_rows
+    slots = jnp.arange(TM, dtype=jnp.int32)[None, :]
+    prev_valid = jnp.pad(valid[:, :-1], ((0, 0), (1, 0)))
+    prev_src = jnp.pad(src[:, :-1], ((0, 0), (1, 0)))
+    contig = valid & prev_valid & (src == prev_src + 1)
+    is_start = valid & ~contig
+    is_end = valid & jnp.pad(~contig[:, 1:], ((0, 0), (0, 1)),
+                             constant_values=True)
+    start_pos = jax.lax.cummax(jnp.where(is_start, slots, -1), axis=1)
+    end_pos = jax.lax.cummin(jnp.where(is_end, slots, TM), axis=1,
+                             reverse=True)
+    length = jnp.where(valid, end_pos - start_pos + 1, 0)
+    off = slots - start_pos
+    # Greedy power-of-two decomposition: a run of length L gets a chunk of
+    # size 2^b at in-run offset (L >> (b+1)) << (b+1) for each set bit b.
+    # cclass = index into the descending cvmm._RUN_SIZES (0 = size TM);
+    # non-chunk slots get the sentinel class nc so argsort pushes them last.
+    nc = len(_RUN_SIZES)
+    csize = jnp.zeros_like(src)
+    cclass = jnp.full_like(src, nc)
+    for b in range(TM.bit_length()):
+        chunk_off = (length >> (b + 1)) << (b + 1)
+        sel = valid & ((length & (1 << b)) > 0) & (off == chunk_off)
+        csize = jnp.where(sel, 1 << b, csize)
+        cclass = jnp.where(sel, nc - 1 - b, cclass)
+    order = jnp.argsort(cclass, axis=1, stable=True).astype(jnp.int32)
+    run_len = jnp.take_along_axis(csize, order, axis=1)
+    counts = jnp.sum(cclass[:, :, None] == jnp.arange(nc)[None, None, :],
+                     axis=1)
+    run_off = jnp.concatenate(
+        [jnp.zeros((n_tiles, 1), jnp.int32),
+         jnp.cumsum(counts, axis=1).astype(jnp.int32)], axis=1)
+    return order.reshape(-1), run_len.reshape(-1), run_off.reshape(-1)
+
+
 def make_moe_plan(idx: jax.Array, gates: jax.Array, n_tokens: int,
                   n_experts: int) -> CvmmPlan:
     """Build the CvmmPlan for one MoE call from the routing selection.
@@ -124,11 +199,23 @@ def make_moe_plan(idx: jax.Array, gates: jax.Array, n_tokens: int,
     new_pos, tile_expert, m_pad = _tile_layout(group_sizes, e_flat.shape[0],
                                                n_experts)
     row_src = jnp.full((m_pad,), n_tokens, jnp.int32).at[new_pos].set(tok[perm])
+    run_start, run_len, run_off = _plan_runs(row_src, n_tokens)
     gate_pad = jnp.zeros((m_pad,), jnp.float32).at[new_pos].set(
         g_flat[perm].astype(jnp.float32))
     return CvmmPlan(perm=perm, group_sizes=group_sizes, new_pos=new_pos,
-                    row_src=row_src, tile_expert=tile_expert,
+                    row_src=row_src, run_start=run_start, run_len=run_len,
+                    run_off=run_off, tile_expert=tile_expert,
                     gate_tiles=gate_pad.reshape(m_pad // TM, TM))
+
+
+def plan_dma_stats(plan: CvmmPlan, n_rows: int) -> dict:
+    """Telemetry: one plan's gather-DMA descriptor counts — run-batched chunks
+    (what each streamed kernel pass issues, ``run_len > 0`` entries) vs the
+    retired one-copy-per-row scheme (valid ``row_src`` slots)."""
+    per_row = int((np.asarray(plan.row_src) < n_rows).sum())
+    batched = int((np.asarray(plan.run_len) > 0).sum())
+    return {"per_row": per_row, "run_batched": batched,
+            "batching_factor": round(per_row / max(batched, 1), 3)}
 
 
 def _float0(a: jax.Array):
@@ -211,20 +298,41 @@ def fused_supported(n_tokens: int, d_model: int, expert_size: int,
                     glu: bool = False) -> bool:
     """Gate for the fused pipeline: TILE-level residency only.
 
-    The streamed w1 kernel keeps the unsorted activations in HBM and
-    double-buffers (TM, K) row tiles through VMEM, so the token count no
-    longer appears in the residency check at all (``n_tokens`` is kept in the
-    signature for callers/telemetry but cannot flip the answer). Callers fall
-    back to the unfused path only when the activation is not tile-local or the
-    per-step tile working set itself cannot fit at any tile size (huge
-    d_model). Sized for the worst case (training: save_preact outputs)."""
+    The streamed kernels keep the unsorted arrays in HBM and double-buffer
+    (TM, K) row tiles through VMEM, so the token count never appears in the
+    residency check (``n_tokens`` is kept in the signature for
+    callers/telemetry but cannot flip the answer). Callers fall back to the
+    unfused path only when the activation is not tile-local or some per-step
+    tile working set cannot fit at any tile size (huge d_model /
+    expert_size). Sized for the worst case (training): the save_preact w1
+    launch, the w2 / dX grouped GEMMs, and the streamed dW kernels — every
+    kernel the fused forward AND backward will compile."""
     del n_tokens  # streamed: any row count is supported
     if activation not in FUSIBLE_ACTIVATIONS:
         return False
     n_weights = 2 if glu else 1
-    return fused_w1_tn(round_up(d_model, LANE), round_up(expert_size, LANE),
-                       jnp.dtype(dtype).itemsize, n_weights,
-                       n_out=1 + n_weights) is not None
+    d_pad, g_pad = round_up(d_model, LANE), round_up(expert_size, LANE)
+    b = jnp.dtype(dtype).itemsize
+    return (fused_w1_tn(d_pad, g_pad, b, n_weights,
+                        n_out=1 + n_weights) is not None
+            and _pick_tn(g_pad, d_pad, b) is not None      # w2 fwd, dX bwd
+            and streamed_dw_tile(d_pad, g_pad, b) is not None)  # dW bwd
+
+
+def pallas_supported(d_model: int, expert_size: int, dtype=jnp.float32) -> bool:
+    """Gate for the UNFUSED pallas path's tile working sets.
+
+    ``_pick_tn`` no longer silently under-tiles: it returns None when even
+    tn=128 exceeds the VMEM budget, and the kernels raise. Every grouped GEMM
+    the unfused path launches (w1/w2 forward, dX, and the dW outer products)
+    must therefore find a fitting tile; when this returns False, dispatchers
+    should fall back to the XLA-native "ragged" impl instead of compiling a
+    kernel that raises at trace time (huge d_model / expert_size configs)."""
+    d_pad, g_pad = round_up(d_model, LANE), round_up(expert_size, LANE)
+    b = jnp.dtype(dtype).itemsize
+    return all(_pick_tn(kp, npad, b) is not None
+               for kp, npad in ((d_pad, g_pad), (g_pad, d_pad),
+                                (TM, d_pad), (TM, g_pad)))
 
 
 def _fused_fwd_impl(static, xf, plan, w1, w1g, w2, save_preact=False):
@@ -234,8 +342,8 @@ def _fused_fwd_impl(static, xf, plan, w1, w1g, w2, save_preact=False):
     # out of HBM, so no row-count padding is needed (sentinel row_src == n).
     xe = _pad_lane(xf, 1)
     w1_out = cvmm_fused_w1_pallas(
-        xe, plan.row_src, plan.tile_expert, _pad_w(w1),
-        _pad_w(w1g) if w1g is not None else None,
+        xe, plan.row_src, plan.run_start, plan.run_off, plan.tile_expert,
+        _pad_w(w1), _pad_w(w1g) if w1g is not None else None,
         act_name=act_name, save_preact=save_preact, interpret=interpret)
     u_pad = w1_out[0] if save_preact else w1_out
     y_pad = cvmm_fused_w2_pallas(u_pad, plan.tile_expert, _pad_w(w2),
@@ -270,17 +378,16 @@ def _fused_bwd(static, res, dy):
     w1gp = _pad_w(w1g) if w1g is not None else None
     m_pad = plan.m_pad
     gate = plan.gate_tiles.reshape(m_pad)[:, None]        # (M_pad, 1) f32
+    runs = (plan.row_src, plan.run_start, plan.run_off, plan.tile_expert)
 
-    # The single layout materialization of the backward pass: cotangent and
-    # activations into the tile-aligned layout via the SAME streamed
-    # double-buffered row-DMA plan as forward (sentinel rows -> 0); the
-    # unsorted arrays stay in HBM here too, no whole-array residency.
-    dy_pad = cvmm_gather_rows_pallas(_pad_lane(dy, 1), plan.row_src,
-                                     interpret=interpret)
-    x_pad = cvmm_gather_rows_pallas(xe, plan.row_src, interpret=interpret)
-
-    t0 = cvmm_pallas(dy_pad, plan.tile_expert, jnp.swapaxes(w2p, 1, 2),
-                     interpret=interpret)                 # dy @ w2^T, no gate
+    # Gather-free backward: the unsorted cotangent and activations stay in
+    # HBM and stream through the same run-batched row-DMA plan as forward —
+    # no tile-aligned (M_pad, K) copy of either is ever materialized.
+    dy_e = _pad_lane(dy, 1)
+    # t0 = gather(dy) @ w2^T: the streamed fused kernel with an identity
+    # epilogue (slack rows zero-fill -> t0 slack rows are exactly zero).
+    t0 = cvmm_fused_w1_pallas(dy_e, *runs, jnp.swapaxes(w2p, 1, 2), None,
+                              act_name="identity", interpret=interpret)
     if w1g is not None:
         h, hg = preact
         u, eltwise_vjp = jax.vjp(lambda a, b: act(a) * b, h, hg)
@@ -296,19 +403,23 @@ def _fused_bwd(static, res, dy):
     else:
         (dh,) = eltwise_vjp(du)
 
-    dyg_pad = (dy_pad.astype(jnp.float32) * gate).astype(dy_pad.dtype)
+    # dW2 streams dy (g-operand) and fuses the gate multiply; dW1/dW1g stream
+    # the activations (x-operand). Both pull straight from pltpu.ANY HBM.
     dw2 = _mask_empty(
-        cvmm_dw_pallas(u, plan.tile_expert, dyg_pad, e, interpret=interpret),
+        cvmm_dw_streamed_pallas(u, dy_e, *runs, e, stream_x=False,
+                                gate_tiles=plan.gate_tiles,
+                                interpret=interpret),
         plan.group_sizes)[:, :gsz, :d].astype(w2.dtype)
     dw1 = _mask_empty(
-        cvmm_dw_pallas(x_pad, plan.tile_expert, dh, e, interpret=interpret),
+        cvmm_dw_streamed_pallas(xe, dh, *runs, e, stream_x=True,
+                                interpret=interpret),
         plan.group_sizes)[:, :d, :gsz].astype(w1.dtype)
     dx_pad = cvmm_pallas(dh, plan.tile_expert, jnp.swapaxes(w1p, 1, 2),
                          interpret=interpret)
     if w1g is not None:
         dw1g = _mask_empty(
-            cvmm_dw_pallas(x_pad, plan.tile_expert, dhg, e,
-                           interpret=interpret),
+            cvmm_dw_streamed_pallas(xe, dhg, *runs, e, stream_x=True,
+                                    interpret=interpret),
             plan.group_sizes)[:, :d, :gsz].astype(w1g.dtype)
         dx_pad = dx_pad + cvmm_pallas(dhg, plan.tile_expert,
                                       jnp.swapaxes(w1gp, 1, 2),
@@ -321,7 +432,8 @@ def _fused_bwd(static, res, dy):
     dplan = CvmmPlan(
         perm=_float0(plan.perm), group_sizes=_float0(plan.group_sizes),
         new_pos=_float0(plan.new_pos), row_src=_float0(plan.row_src),
-        tile_expert=_float0(plan.tile_expert),
+        run_start=_float0(plan.run_start), run_len=_float0(plan.run_len),
+        run_off=_float0(plan.run_off), tile_expert=_float0(plan.tile_expert),
         gate_tiles=dgate.reshape(plan.gate_tiles.shape))
     return dxf, dplan, dw1, dw1g, dw2
 

@@ -148,3 +148,73 @@ def test_usage_stats_detects_collapse():
     s_c = usage_stats(SelectionInfo(probs, probs, idx_collapsed, gates), NE)
     s_u = usage_stats(SelectionInfo(probs, probs, idx_uniform, gates), NE)
     assert float(s_c["usage_entropy"]) < float(s_u["usage_entropy"])
+
+
+@pytest.mark.parametrize("glu", [False, True])
+def test_shard_map_parity_and_no_dummy_glu_weight(glu, monkeypatch):
+    """shard_map EP path == einsum path for GLU on AND off, on a real (single
+    device) 'model' mesh so the shard_map branch actually runs. Guards the
+    dummy-w1g fix: the non-GLU path must ship exactly 5 operands through
+    shard_map (no (E,1,1) zeros placeholder, no size-1-broadcast einsum)."""
+    from repro.core import moe as moe_mod
+    from repro.sharding import mesh_context
+
+    cfg_e = moe_ffn(NE, G, K, dispatch="einsum", capacity_factor=8.0)
+    cfg_e = dataclasses.replace(cfg_e, glu_experts=glu)
+    cfg_s = dataclasses.replace(cfg_e, dispatch="shard_map")
+    p = init_moe(jax.random.PRNGKey(1), D, cfg_e, n_layers=2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, D))
+
+    shipped = {}
+    orig = moe_mod._shard_map
+
+    def spy(fn, **kw):
+        inner = orig(fn, **kw)
+
+        def call(*args):
+            shipped["n_operands"] = len(args)
+            return inner(*args)
+        return call
+
+    monkeypatch.setattr(moe_mod, "_shard_map", spy)
+    mesh = jax.make_mesh((1,), ("model",))
+    with mesh_context(mesh):
+        ye, _ = apply_moe(p, x, cfg_e)
+        ys, _ = apply_moe(p, x, cfg_s)
+        gs = jax.grad(lambda p: apply_moe(p, x, cfg_s)[0].sum())(p)
+        ge = jax.grad(lambda p: apply_moe(p, x, cfg_e)[0].sum())(p)
+    assert shipped["n_operands"] == (6 if glu else 5)
+    np.testing.assert_allclose(np.asarray(ye), np.asarray(ys), atol=1e-5)
+    for name in ge:
+        np.testing.assert_allclose(np.asarray(ge[name]), np.asarray(gs[name]),
+                                   atol=1e-4, err_msg=name)
+
+
+def test_sort_dispatch_falls_back_to_ragged_when_no_tile_fits(monkeypatch):
+    """_pick_tn returning None must not crash the sort path: when even the
+    UNFUSED pallas kernels cannot tile the working set into VMEM, _apply_sort
+    falls back to XLA's ragged grouped matmul instead of raising at trace
+    time (and stays numerically identical to an explicit ragged run)."""
+    from repro.kernels import cvmm, ops as kops
+
+    cfg, p, x = _setup("sort")
+    # d=32 -> k_pad=128: tn=128 needs > 128KiB; starve it so nothing fits.
+    monkeypatch.setattr(cvmm, "VMEM_BUDGET", 1 << 16)
+    assert not kops.pallas_supported(D, cfg.expert_size)
+    assert not kops.fused_supported(40, D, cfg.expert_size, cfg.activation)
+    kops.set_default_impl("pallas_fused_interpret")
+    try:
+        y, _ = apply_moe(p, x, cfg)
+        gy = jax.grad(lambda p: apply_moe(p, x, cfg)[0].sum())(p)
+    finally:
+        kops.set_default_impl(None)
+    kops.set_default_impl("ragged")
+    try:
+        yr, _ = apply_moe(p, x, cfg)
+        gr = jax.grad(lambda p: apply_moe(p, x, cfg)[0].sum())(p)
+    finally:
+        kops.set_default_impl(None)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-6)
+    for name in gr:
+        np.testing.assert_allclose(np.asarray(gy[name]), np.asarray(gr[name]),
+                                   atol=1e-5, err_msg=name)

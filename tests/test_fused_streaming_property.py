@@ -120,7 +120,12 @@ def _check_parity(n, e, g, k, e_valid, dtype, seed, glu, *, bwd=True,
         a = np.asarray(a, np.float32)
         b = np.asarray(b, np.float32)
         assert np.isfinite(a).all(), name
-        np.testing.assert_allclose(a, b, atol=tol_b, rtol=tol_b, err_msg=name)
+        # Same rationale as the forward check: the oracle rounds intermediates
+        # through bf16 while the kernels keep f32 epilogues, so bf16 elements
+        # with partial cancellation differ by an ABSOLUTE margin set by the
+        # gradient's scale rather than their own magnitude.
+        atol = tol_b if f32 else max(tol_b, 0.02 * float(np.abs(b).max()))
+        np.testing.assert_allclose(a, b, atol=atol, rtol=tol_b, err_msg=name)
 
 
 def test_streamed_parity_at_4x_old_budget(small_vmem_budget):
@@ -145,6 +150,34 @@ def test_streamed_parity_straddles_old_boundary(small_vmem_budget, dtype, glu):
     for i, n in enumerate((old - 257, old + 1, old + 513)):
         _check_parity(n, e=3, g=32, k=2, e_valid=3, dtype=dtype, seed=i,
                       glu=glu, bwd=(i == 1) and f32)
+
+
+def test_streamed_bwd_run_batched_long_runs(small_vmem_budget):
+    """Run-batching acceptance: K=1 with every token on one expert makes
+    row_src fully contiguous — the plan must collapse each full tile to a
+    single size-TM DMA descriptor — and the gather-free streamed backward
+    must match the oracle past the old whole-x boundary in that regime."""
+    dtype, glu = jnp.float32, False
+    n = _old_boundary(dtype, glu) + 3 * cvmm.TM + 7
+    xf, idx, gates, w1, w1g, w2 = _mk(n, 2, 32, 1, 1, dtype, seed=11,
+                                      skew=True)
+    plan = ops.make_moe_plan(idx, gates, n, 2)
+    rl = np.asarray(plan.run_len)
+    assert int((rl == cvmm.TM).sum()) == n // cvmm.TM
+    n_dma = int((rl > 0).sum())
+    per_row = int((np.asarray(plan.row_src) < n).sum())
+    assert n_dma <= per_row // 64      # ~1 descriptor per tile, not per row
+    _check_parity(n, e=2, g=32, k=1, e_valid=1, dtype=dtype, seed=11,
+                  glu=glu, bwd=True, skew=True)
+
+
+def test_streamed_bwd_bf16_past_boundary(small_vmem_budget):
+    """bf16 fwd+bwd parity past the old whole-x boundary: the streamed dW/dX
+    kernels must keep bf16 operands finite and close to the oracle."""
+    dtype, glu = jnp.bfloat16, True
+    n = _old_boundary(dtype, glu) + 129
+    _check_parity(n, e=3, g=32, k=1, e_valid=2, dtype=dtype, seed=5, glu=glu,
+                  bwd=True)
 
 
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")

@@ -283,15 +283,125 @@ def test_fused_single_expert_plan():
 
 
 def test_gather_rows_pallas_matches_take():
-    """The streamed backward gather == jnp.take with zero fill on sentinels."""
+    """The streamed gather primitive == jnp.take with zero fill on sentinels."""
     n, d, e, k = 45, 24, 4, 2
     case = (n, d, e, 16, k, e)
     xf, idx, gates, *_ = _mk(case, jnp.float32)
     plan = ops.make_moe_plan(idx, gates, n, e)
     xe = ops._pad_lane(xf, 1)
-    got = cvmm.cvmm_gather_rows_pallas(xe, plan.row_src, interpret=True)
+    got = cvmm.cvmm_gather_rows_pallas(xe, plan.row_src, plan.run_start,
+                                       plan.run_off, interpret=True)
     want = jnp.take(xe, plan.row_src, axis=0, mode="fill", fill_value=0)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def _replay_runs(plan, n_rows, x):
+    """Numpy re-execution of the plan's DMA chunk table, the way the kernels
+    walk it (one loop per static size class over the run_off boundaries):
+    returns the gathered tile-aligned array and the number of descriptors
+    issued. Cross-checks run_len against the class each entry sits in."""
+    rs = np.asarray(plan.row_src)
+    rst = np.asarray(plan.run_start)
+    rl = np.asarray(plan.run_len)
+    nc = len(cvmm._RUN_SIZES)
+    ro = np.asarray(plan.run_off).reshape(-1, nc + 1)
+    out = np.zeros((plan.m_pad, x.shape[1]), x.dtype)
+    n_dma = 0
+    for t in range(plan.m_pad // ops.TM):
+        assert ro[t, 0] == 0
+        for ci, sz in enumerate(cvmm._RUN_SIZES):
+            for j in range(ro[t, ci], ro[t, ci + 1]):
+                assert int(rl[t * ops.TM + j]) == sz  # class-grouped table
+                off = int(rst[t * ops.TM + j])
+                src = int(rs[t * ops.TM + off])
+                assert src + sz <= n_rows, "chunk overruns the source array"
+                assert off + sz <= ops.TM, "chunk overruns the tile"
+                out[t * ops.TM + off: t * ops.TM + off + sz] = x[src: src + sz]
+                n_dma += 1
+        # entries past the last boundary are unused (run_len == 0)
+        assert (rl[t * ops.TM + ro[t, nc]: (t + 1) * ops.TM] == 0).all()
+    return out, n_dma
+
+
+@pytest.mark.parametrize("case,skew", [((100, 16, 6, 8, 3, 5), False),
+                                       ((300, 16, 3, 8, 1, 3), True)])
+def test_plan_run_metadata_replays_gather(case, skew):
+    """run_start/run_len describe exactly the row_src gather: replaying the
+    chunk table in numpy reproduces take-with-zero-fill, never issues more
+    descriptors than one-per-row, and fully batches contiguous tiles."""
+    n, d, e, g, k, e_valid = case
+    xf, idx, gates, *_ = _mk(case, jnp.float32)
+    if skew:
+        idx = jnp.zeros((n, k), jnp.int32)          # K=1, all rows -> expert 0
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    x = np.asarray(ops._pad_lane(xf, 1))
+    got, n_dma = _replay_runs(plan, n, x)
+    want = np.asarray(jnp.take(jnp.asarray(x), plan.row_src, axis=0,
+                               mode="fill", fill_value=0))
+    np.testing.assert_array_equal(got, want)
+    per_row = int((np.asarray(plan.row_src) < n).sum())
+    assert 0 < n_dma <= per_row
+    if skew:
+        # fully contiguous row_src: every full tile is ONE size-TM descriptor
+        rl = np.asarray(plan.run_len)
+        assert int((rl == ops.TM).sum()) == n // ops.TM
+        assert n_dma < per_row // 8
+
+
+def test_fused_bwd_is_gather_free(monkeypatch):
+    """Regression for the streamed backward: _fused_bwd must not materialize
+    tile-aligned gathers via cvmm_gather_rows_pallas — dW/dX stream their
+    unsorted operands straight from HBM."""
+    def boom(*a, **kw):
+        raise AssertionError("backward materialized a gather in HBM")
+
+    monkeypatch.setattr(cvmm, "cvmm_gather_rows_pallas", boom)
+    # ops.py no longer even imports the gather primitive; raising=False keeps
+    # this tripwire armed should a future change reintroduce the import.
+    monkeypatch.setattr(ops, "cvmm_gather_rows_pallas", boom, raising=False)
+
+    case = (40, 24, 5, 16, 2, 5)
+    n, d, e, g, k, _ = case
+    xf, idx, gates, w1, w1g, w2 = _mk(case, jnp.float32)
+
+    def loss(xf, w1, w1g, w2):
+        plan = ops.make_moe_plan(idx, gates, n, e)
+        return ops.moe_mlp_fused(xf, plan, w1, w2, w1g, activation="relu",
+                                 interpret=True).sum()
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3))(xf, w1, w1g, w2)
+    assert all(np.isfinite(np.asarray(gr)).all() for gr in grads)
+
+
+@pytest.mark.parametrize("stream_x", [True, False])
+def test_dw_streamed_matches_unfused_dw(stream_x):
+    """The streamed dW kernel == the unfused dW kernel fed the materialized
+    gather, for both streamed sides (dW1's x-operand, dW2's gated g-operand)."""
+    case = (52, 24, 4, 16, 2, 4)
+    n, d, e, g, k, _ = case
+    xf, idx, gates, _, _, _ = _mk(case, jnp.float32)
+    key = jax.random.PRNGKey(7)
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    xe = ops._pad_lane(xf, 1)
+    d_pad, g_pad = xe.shape[1], ops.round_up(g, ops.LANE)
+    x_pad = jnp.take(xe, plan.row_src, axis=0, mode="fill", fill_value=0)
+    runs = (plan.row_src, plan.run_start, plan.run_off, plan.tile_expert)
+    if stream_x:
+        gg = jax.random.normal(key, (plan.m_pad, g_pad), jnp.float32)
+        got = cvmm.cvmm_dw_streamed_pallas(xe, gg, *runs, e, stream_x=True,
+                                           interpret=True)
+        want = cvmm.cvmm_dw_pallas(x_pad, plan.tile_expert, gg, e,
+                                   interpret=True)
+    else:
+        u = jax.random.normal(key, (plan.m_pad, g_pad), jnp.float32)
+        got = cvmm.cvmm_dw_streamed_pallas(u, xe, *runs, e, stream_x=False,
+                                           gate_tiles=plan.gate_tiles,
+                                           interpret=True)
+        gate = plan.gate_tiles.reshape(-1)[:, None]
+        want = cvmm.cvmm_dw_pallas(u, plan.tile_expert, x_pad * gate, e,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
 
 
 def test_fused_supported_streams_past_whole_x_budget():
