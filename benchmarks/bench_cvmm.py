@@ -18,7 +18,7 @@ the DMA overlap the streamed backward exists for, so ``bwd`` reads ~1.0
 there (TPU is where the overlap pays); CI gates it as a regression tripwire
 (>= 0.85), not a speedup claim.
 
-Two configs are measured:
+Three configs are measured:
 
   base     one MoE layer's worth of tokens, small enough that interpret-mode
            kernels finish in seconds on a single CPU core; fwd AND fwd+bwd.
@@ -29,6 +29,13 @@ Two configs are measured:
            rewrite ``fused_supported`` rejected it and the fused path silently
            fell back. Forward-only and fewer iters to keep the quick bench
            fast; recorded under ``large_n`` in the JSON.
+  pkm      the unified layer's weighted value aggregation (PR 5): PKM-style
+           H*K-of-n_values selection through GatherPlan + the streamed gather
+           kernels vs the dense (N, S, d) take+einsum it replaced. Recorded
+           as ``pkm_speedup_vs_dense`` and CI-gated with interpret-mode
+           TRIPWIRE semantics (like the ``bwd`` gate): on CPU the serialized
+           DMA pipeline loses to XLA's fused gather, so the thresholds only
+           trip on real regressions of the planned path.
 
 On CPU the pallas kernels run in interpret mode, so absolute numbers are not
 TPU numbers; the comparison fused-vs-unfused and the bytes model are the
@@ -72,6 +79,67 @@ def _large_n_config() -> BenchConfig:
     old = legacy_whole_x_rows(k_pad=128, bytes_per_el=4, n_weights=1, n_out=2)
     return BenchConfig(n_tokens=old + TM, d_model=128, n_experts=4,
                        expert_size=128, k=1, glu=False)
+
+
+class PkmBenchConfig(NamedTuple):
+    n_tokens: int
+    d_model: int
+    n_values: int
+    heads: int
+    knn: int
+
+
+# PKM value aggregation through the unified planned layer (PR 5): one MoE
+# layer's worth of tokens selecting H*K of n_values value rows each — the
+# expert_size-1 regime where the dense path materializes an (N, H*K, d)
+# value gather that the GatherPlan-driven streamed kernels never build.
+PKM = PkmBenchConfig(n_tokens=192, d_model=128, n_values=512, heads=2, knn=8)
+
+
+def _pkm_setup(cfg: PkmBenchConfig, dtype=jnp.float32):
+    key = jax.random.PRNGKey(0)
+    ki, kw, kv = jax.random.split(key, 3)
+    s = cfg.heads * cfg.knn
+    idx = jax.random.randint(ki, (cfg.n_tokens, s), 0, cfg.n_values)
+    w = jax.nn.relu(jax.random.normal(kw, (cfg.n_tokens, s), jnp.float32))
+    values = (0.3 * jax.random.normal(
+        kv, (cfg.n_values, cfg.d_model))).astype(dtype)
+    return values, idx, w
+
+
+def _pkm_agg(impl: str, cfg: PkmBenchConfig):
+    """The PKM aggregation y[t] = sum_s w[t,s] * V[idx[t,s]] per chain rung —
+    mirroring core/dispatch.weighted_value_sum exactly (plan built per call,
+    as in production)."""
+    def f(values, idx, w):
+        if impl == "dense":
+            return jnp.einsum("ns,nsd->nd", w.astype(values.dtype),
+                              values[idx])
+        plan = ops.make_gather_plan(idx, w, cfg.n_values)
+        return ops.gathered_weighted_sum(
+            values, plan, cfg.n_tokens,
+            fuse_weights=(impl == "pallas_fused"))
+    return f
+
+
+def _bench_pkm(cfg: PkmBenchConfig, iters: int) -> dict:
+    args = _pkm_setup(cfg)
+    results = {}
+    for impl in ("dense", "pallas", "pallas_fused"):
+        f = _pkm_agg(impl, cfg)
+        entry = {"fwd_us": round(_time(jax.jit(f), args, iters), 1)}
+        probe = lambda v, i, w: f(v, i, w).astype(jnp.float32).sum()
+        grad = jax.jit(jax.grad(probe, argnums=(0, 2)))
+        entry["fwd_bwd_us"] = round(_time(grad, args, iters), 1)
+        results[impl] = entry
+    speedup = {
+        k: round(results["dense"][f"{k}_us"]
+                 / max(results["pallas_fused"][f"{k}_us"], 1e-9), 3)
+        for k in ("fwd", "fwd_bwd")}
+    plan = ops.make_gather_plan(args[1], args[2], cfg.n_values)
+    return {"config": cfg._asdict(), "results": results,
+            "pkm_speedup_vs_dense": speedup,
+            "dma_descriptors": ops.plan_dma_stats(plan, cfg.n_values)}
 
 
 def _setup(cfg: BenchConfig, dtype=jnp.float32):
@@ -243,6 +311,14 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
     # past the old residency boundary: fwd-only + few iters (interpret-mode
     # calls here are ~100x the base config's work per call)
     large = _bench_config(large_cfg, min(iters, 2), with_bwd=False)
+    # PKM aggregation through the unified planned layer (PR 5). On CPU the
+    # interpret-mode DMA pipeline is serialized python-traced copies while
+    # the dense reference is one highly-tuned XLA gather+einsum, so the
+    # ratio reads ~0.1 (fwd) / ~0.4 (fwd+bwd) here — TPU is where the
+    # streamed gather pays. CI gates it as a regression TRIPWIRE (a planned
+    # path that started doing dense-path work on top of the kernels would
+    # crater the ratio), not a speedup claim.
+    pkm = _bench_pkm(PKM, max(iters, 10))
     payload = {
         "config": {**base["config"], "iters": iters,
                    "backend": jax.default_backend(),
@@ -250,6 +326,11 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
         "results": base["results"],
         "fused_speedup_vs_pallas": base["fused_speedup_vs_pallas"],
         "dma_descriptors": base["dma_descriptors"],
+        "pkm_speedup_vs_dense": pkm["pkm_speedup_vs_dense"],
+        "pkm": {**pkm,
+                "note": "value aggregation via GatherPlan + streamed gather "
+                        "kernels vs the dense (N, S, d) take+einsum; "
+                        "interpret-mode ratios are tripwires, see above"},
         "large_n": {**large,
                     "note": "token count past the retired whole-x VMEM "
                             "boundary; streamed row-DMA gather territory"},
@@ -266,6 +347,9 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
     rows += [f"cvmm/large_n{large_cfg.n_tokens}/{impl}_fwd,{r['fwd_us']},"
              f"est_bytes={r['est_intermediate_bytes']['fwd']}"
              for impl, r in large["results"].items()]
+    rows += [f"cvmm/pkm_agg/{impl}_fwd,{r['fwd_us']},"
+             f"fwd_bwd_us={r['fwd_bwd_us']}"
+             for impl, r in pkm["results"].items()]
     rows.append(
         f"# wrote {out_path}; fused/unfused speedups fwd+bwd "
         f"{payload['fused_speedup_vs_pallas']['fwd_bwd']}x / bwd-only "
@@ -273,7 +357,10 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
         f"{payload['dma_descriptors']['batching_factor']}x (base) / "
         f"{large['dma_descriptors']['batching_factor']}x (large-N); large-N "
         f"(n={large_cfg.n_tokens}) fwd speedup "
-        f"{large['fused_speedup_vs_pallas']['fwd']}x")
+        f"{large['fused_speedup_vs_pallas']['fwd']}x; pkm-agg vs dense "
+        f"{payload['pkm_speedup_vs_dense']['fwd']}x fwd / "
+        f"{payload['pkm_speedup_vs_dense']['fwd_bwd']}x fwd+bwd "
+        f"(interpret-mode tripwire)")
     return rows
 
 

@@ -2,7 +2,12 @@
 
 Trains sigma-MoE and the 'softmax (renorm.)' ablation, then reports per-expert
 selection-weight share + usage entropy. Paper claim: softmax+renorm collapses,
-sigma-MoE stays balanced without Sinkhorn."""
+sigma-MoE stays balanced without Sinkhorn.
+
+Since PR 5 the same probe also covers PKM: the uniform ``collect_stats`` aux
+contract (core/dispatch.selection_usage) yields the value-usage histogram, so
+memory-slot collapse is reported on the same axes as expert collapse — the
+framework's selection rules are directly comparable."""
 import dataclasses
 
 import jax
@@ -10,10 +15,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import moe_ffn
-from repro.configs.base import OptimizerConfig
+from repro.configs.base import FFNConfig, OptimizerConfig
 from repro.core.moe import _route
+from repro.core.pkm import apply_pkm
 from repro.core.regularizers import usage_stats
-from repro.core.routing import SelectionInfo
 from repro.data import DataIterator, make_dataset
 from repro.models import build_model
 from repro.runtime.steps import init_train_state, make_train_step
@@ -21,9 +26,10 @@ from repro.runtime.steps import init_train_state, make_train_step
 from .common import csv_row, tiny_lm
 
 NE, G, K = 8, 32, 2
+PKM_NS = 12                              # 144 values, tiny-bench scale
 
 
-def _train_and_probe(name, ffn, steps=120):
+def _train(ffn, steps):
     cfg = tiny_lm(ffn)
     model = build_model(cfg)
     opt = OptimizerConfig(lr=3e-3, total_steps=steps)
@@ -33,19 +39,33 @@ def _train_and_probe(name, ffn, steps=120):
     for _ in range(steps):
         state, _ = step_fn(state, {"tokens": jnp.asarray(it.next()["tokens"])},
                            jax.random.PRNGKey(1))
-    # probe routing of layer 0 on a validation batch
+    # layer-0 FFN params + a validation activation batch for probing
     params = state["params"]
     toks = jnp.asarray(it.next()["tokens"])[:, :-1]
     x = params["emb"].astype(model.dtype)[toks].reshape(-1, cfg.d_model)
     blk = jax.tree_util.tree_map(lambda a: a[0],
                                  params["stack"]["segments"][0]["e0"])
-    info = _route(blk["ffn"], x, ffn, None, False, NE)
-    st = usage_stats(info, NE)
+    return blk["ffn"], x
+
+
+def _report(name, st, n_items):
     share = np.sort(np.asarray(st["weight"]))[::-1]
-    share = share / share.sum()
+    share = share / max(share.sum(), 1e-9)
     return csv_row(f"fig3/{name}", 0.0,
                    f"usage_entropy={float(st['usage_entropy']):.3f};"
-                   f"top1_share={share[0]:.2f};max_entropy={np.log(NE):.3f}")
+                   f"top1_share={share[0]:.2f};max_entropy={np.log(n_items):.3f}")
+
+
+def _train_and_probe(name, ffn, steps=120):
+    fp, x = _train(ffn, steps)
+    info = _route(fp, x, ffn, None, False, NE)
+    return _report(name, usage_stats(info, NE), NE)
+
+
+def _train_and_probe_pkm(name, ffn, steps=120):
+    fp, x = _train(ffn, steps)
+    _, aux = apply_pkm(fp, x, ffn, collect_stats=True)
+    return _report(name, aux["usage"], ffn.n_values)
 
 
 def run(steps: int = 120):
@@ -53,8 +73,11 @@ def run(steps: int = 120):
                    expert_dropout=0.05)
     bad = dataclasses.replace(base, selector_activation="softmax",
                               renormalize=True, reg_gamma=0.0, expert_dropout=0.0)
+    pkm = FFNConfig(kind="pkm", n_subkeys=PKM_NS, pkm_heads=2, pkm_knn=8,
+                    activation="relu")
     return [_train_and_probe("sigma_moe", base, steps),
-            _train_and_probe("softmax_renorm_noreg", bad, steps)]
+            _train_and_probe("softmax_renorm_noreg", bad, steps),
+            _train_and_probe_pkm("pkm_value_usage", pkm, steps)]
 
 
 if __name__ == "__main__":

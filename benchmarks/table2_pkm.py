@@ -1,10 +1,20 @@
 """Paper Table 2/6: PKM softmax vs ReLU vs dense (parameter-matched).
 
 Paper claim: ReLU (non-competitive) PKM clearly beats softmax PKM; both trail dense.
+
+Since PR 5 the derived column also reports which rung of the unified
+execution layer's chain each PKM variant lowers to (``path=``, via
+``core.dispatch.value_sum_path``): on TPU this reads ``pallas_fused`` (value
+aggregation through GatherPlan + the streamed gather kernels); on the CPU
+bench host the auto default is the einsum rung. Dense FFNs report
+``path=matmul`` (no selection, nothing to plan).
 """
 from repro.configs.base import FFNConfig
+from repro.core.dispatch import value_sum_path
 
 from .common import csv_row, tiny_lm, train_variant
+
+D_MODEL = 64
 
 
 def run(steps: int = 120):
@@ -22,9 +32,14 @@ def run(steps: int = 120):
                                     sigma_moe_init=True)),
     ]
     for name, ffn in variants:
-        r = train_variant(f"table2/{name}", tiny_lm(ffn), steps=steps)
-        rows.append(csv_row(r["name"], r["us_per_step"],
-                            f"final_loss={r['final_loss']:.4f};params={r['params']}"))
+        r = train_variant(f"table2/{name}", tiny_lm(ffn, d_model=D_MODEL),
+                          steps=steps)
+        path = (value_sum_path(ffn, D_MODEL) if ffn.kind == "pkm"
+                else "matmul")
+        rows.append(csv_row(
+            r["name"], r["us_per_step"],
+            f"final_loss={r['final_loss']:.4f};params={r['params']};"
+            f"path={path}"))
     return rows
 
 

@@ -20,6 +20,19 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 FFN_KINDS = ("dense", "glu", "topk", "pkm", "sigma_moe", "switch", "sbase", "noisy_topk", "none")
 
+# Kernel lowering of the planned execution layer (core/dispatch.py):
+#   auto          defer to kernels.ops.default_impl() (pallas_fused on TPU,
+#                 ragged elsewhere) — the production setting.
+#   pallas_fused  fused streamed kernels (epilogues in-kernel); *_interpret
+#   pallas        unfused planned kernels;                       variants run
+#   ragged        lax.ragged_dot grouped matmul (MoE sort path)  the pallas
+#   einsum        XLA take+einsum rung (weighted value sums)     kernels in
+#   dense         bypass the planned layer entirely: full down-  interpret
+#                 projection / dense 4-D value gather (oracle    mode (tests)
+#                 reference for tests and ablations)
+FFN_IMPLS = ("auto", "dense", "einsum", "ragged", "ref", "pallas",
+             "pallas_interpret", "pallas_fused", "pallas_fused_interpret")
+
 
 @dataclass(frozen=True)
 class FFNConfig:
@@ -50,6 +63,7 @@ class FFNConfig:
     reg_kind: str = "entropy"          # entropy | switch | cv | none
     capacity_factor: float = 1.25      # mu, for capacity-based dispatch
     dispatch: str = "einsum"           # einsum | sort  (sort == CVMM path)
+    impl: str = "auto"                 # kernel lowering, see FFN_IMPLS
     sigma_moe_init: bool = True        # paper's dense-equivalent init
     n_shared_experts: int = 0          # llama4-style always-on shared expert
     glu_experts: bool = False          # experts use GLU (for llama-family MoE)
@@ -64,14 +78,23 @@ class FFNConfig:
 
     @property
     def n_values(self) -> int:
+        """DERIVED from n_subkeys (the single source of truth): the PKM value
+        table is always (n_subkeys**2, d_model), and init_pkm scales by this
+        same quantity — a stale d_ff cannot silently mis-scale the paper's
+        dense-equivalent value init (validated below)."""
         return self.n_subkeys * self.n_subkeys
 
     def validate(self) -> None:
         assert self.kind in FFN_KINDS, self.kind
+        assert self.impl in FFN_IMPLS, self.impl
         if self.kind in ("sigma_moe", "switch", "sbase", "noisy_topk"):
             assert self.n_experts > 0 and self.expert_size > 0 and self.k > 0
         if self.kind == "pkm":
             assert self.n_subkeys > 1
+            # d_ff, when set for parameter accounting, must agree with the
+            # derived value count — PKM's d_ff IS n_subkeys**2 (paper Sec 3.2).
+            assert self.d_ff in (0, self.n_values), \
+                f"pkm d_ff={self.d_ff} != n_subkeys**2={self.n_values}"
         if self.kind in ("dense", "glu", "topk"):
             assert self.d_ff > 0
 

@@ -1,19 +1,25 @@
 """The paper's core contribution: approximations of 2-layer MLPs.
 
-- topk_mlp: dense / GLU / Top-K activation (Sec. 2, 3.1)
-- pkm:      product-key memories (Sec. 3.2)
-- moe:      sigma-MoE + Switch / S-BASE / noisy-top-K baselines (Sec. 3.3-5)
+- dispatch:  the shared selection -> planned-execution layer (Sec. 2 framework)
+- topk_mlp:  dense / GLU / Top-K activation (Sec. 2, 3.1)
+- pkm:       product-key memories (Sec. 3.2)
+- moe:       sigma-MoE + Switch / S-BASE / noisy-top-K baselines (Sec. 3.3-5)
 """
+from .dispatch import (Selection, base_aux, expert_mlp, resolve_impl,
+                       selection_usage, value_sum_path, weighted_value_sum)
 from .moe import apply_moe, init_moe, n_experts_padded
-from .pkm import apply_pkm, init_pkm, pkm_full_scores
+from .pkm import apply_pkm, init_pkm, pkm_full_scores, pkm_select
 from .routing import (SelectionInfo, expert_dropout_mask, norm_topk,
                       select_experts, select_experts_sbase, sinkhorn)
 from .regularizers import REGULARIZERS, cv_reg, entropy_reg, switch_reg, usage_stats
 from .topk_mlp import apply_dense, init_dense
 
 __all__ = [
+    "Selection", "base_aux", "expert_mlp", "resolve_impl",
+    "selection_usage", "value_sum_path", "weighted_value_sum",
     "apply_moe", "init_moe", "n_experts_padded", "apply_pkm", "init_pkm",
-    "pkm_full_scores", "SelectionInfo", "expert_dropout_mask", "norm_topk",
-    "select_experts", "select_experts_sbase", "sinkhorn", "REGULARIZERS", "cv_reg",
-    "entropy_reg", "switch_reg", "usage_stats", "apply_dense", "init_dense",
+    "pkm_full_scores", "pkm_select", "SelectionInfo", "expert_dropout_mask",
+    "norm_topk", "select_experts", "select_experts_sbase", "sinkhorn",
+    "REGULARIZERS", "cv_reg", "entropy_reg", "switch_reg", "usage_stats",
+    "apply_dense", "init_dense",
 ]

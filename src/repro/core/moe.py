@@ -1,43 +1,30 @@
-"""sigma-MoE and baseline MoE variants (paper Sec. 3.3-5) with three dispatch paths.
+"""sigma-MoE and baseline MoE variants (paper Sec. 3.3-5): parameters + routing.
 
-Dispatch paths
---------------
-"sort"      The paper-faithful, *dropless* path: tokens are argsorted by expert id and
-            multiplied by their expert's matrices via a grouped matmul -- the TPU
-            adaptation of the paper's CVMM CUDA kernel (kernels/cvmm.py). No capacity,
-            no token drops, exactly Eq. 11. Experts live wherever the weights are
-            sharded (replicated / FSDP); no all-to-all.
+This module owns what is MoE-*specific* — expert/selector initialization
+(paper Sec. 5 init), the routing front-end (routing.py selectors at the
+layer's logits), shared always-on experts, and the regularizer bookkeeping.
+The selection -> dispatch -> execution machinery lives in core/dispatch.py
+(``dispatch.expert_mlp``), shared with every other approximator in the
+paper's framework: the three dispatch paths ("sort" dropless CVMM, "einsum"
+GShard capacity under pjit, "shard_map" explicit all_to_all EP) and the
+kernel capability chain (pallas_fused -> pallas -> ragged) are resolved
+there, in one place. ``apply_moe`` is routing + one call into that layer.
 
-"einsum"    GShard-style capacity-based dense dispatch under plain pjit: scatter tokens
-            into an (E, C, d) buffer, einsum against expert weights; GSPMD inserts the
-            collectives when experts are sharded over the 'model' axis. Robust baseline
-            for the multi-pod dry-run.
-
-"shard_map" Explicit expert parallelism: per-data-shard routing + capacity packing,
-            one all_to_all along 'model' to move token buffers to their expert shards,
-            local expert FFN, inverse all_to_all back. The production EP path.
-
-All paths share the routing math (routing.py), regularizers (regularizers.py) and the
-paper's initialization (init.py), so ablations isolate exactly one design choice.
+All paths share the routing math (routing.py), regularizers (regularizers.py)
+and the paper's initialization (init.py), so ablations isolate exactly one
+design choice.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-try:                                   # jax >= 0.6
-    _shard_map = jax.shard_map
-except AttributeError:                 # jax 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-from ..common import act_fn, cdiv, round_up
+from ..common import act_fn, round_up
 from ..configs.base import FFNConfig
-from ..sharding.context import current_mesh
 from . import init as initlib
+from .dispatch import expert_mlp
 from .regularizers import REGULARIZERS, usage_stats
 from .routing import SelectionInfo, select_experts, select_experts_sbase
 
@@ -91,16 +78,8 @@ def init_moe(key, d_model: int, cfg: FFNConfig, n_layers: int,
     return p
 
 
-def _expert_ffn(cfg: FFNConfig, h_pre, h_gate):
-    act = act_fn(cfg.activation)
-    u = act(h_pre)
-    if cfg.glu_experts:
-        u = u * h_gate
-    return u
-
-
 # ---------------------------------------------------------------------------
-# Routing front-end (shared)
+# Routing front-end (shared by all dispatch paths)
 # ---------------------------------------------------------------------------
 
 def _route(params: Dict, xf: jax.Array, cfg: FFNConfig, rng, train: bool,
@@ -123,217 +102,7 @@ def _route(params: Dict, xf: jax.Array, cfg: FFNConfig, rng, train: bool,
 
 
 # ---------------------------------------------------------------------------
-# Path 1: sort / CVMM (paper-faithful, dropless)
-# ---------------------------------------------------------------------------
-
-def _apply_sort(params: Dict, xf: jax.Array, cfg: FFNConfig, info: SelectionInfo,
-                e: int) -> jax.Array:
-    """Dropless grouped matmul: the TPU CVMM path.
-
-    All pallas variants build ONE ``CvmmPlan`` per call (the layout metadata is
-    shared by every kernel launch, forward and backward — kernels/ops.py).
-
-    "pallas_fused": the gather, the w1 activation/GLU epilogue and the w2 gate
-    multiply run inside the grouped-GEMM kernels; nothing between the routing
-    and the final scatter-add is materialized at the XLA level. The gather
-    streams rows HBM->VMEM through a double-buffered DMA pipeline, so
-    ``fused_supported`` gates only on tile-level residency (activation
-    fusibility + per-step tile working set) — production token counts no
-    longer fall back to the unfused path.
-
-    "pallas"/"ragged"/"ref": 1. flatten (token, k) pairs; 2. stable-argsort by
-    expert id (the paper's CUDA kernel does exactly this reordering); 3. grouped
-    matmul where row-groups share an expert matrix; 4. scatter-add results back
-    per token, weighted by the gates.
-    """
-    from ..kernels import ops as kops  # local import: kernels are optional at import
-
-    n, d = xf.shape
-    k = cfg.k
-    impl = kops.default_impl()
-
-    if (impl.startswith("pallas")
-            and not kops.pallas_supported(d, cfg.expert_size, xf.dtype)):
-        # Even the unfused kernels cannot tile this d_model/expert_size into
-        # VMEM (_pick_tn returns None and the kernels raise rather than
-        # compile a VMEM-exhausting tn=128): fall back to XLA's grouped
-        # matmul instead of failing at trace time.
-        impl = "ragged"
-
-    if impl.startswith("pallas"):
-        w1 = params["we1"].astype(xf.dtype)
-        w2 = params["we2"].astype(xf.dtype)
-        w1g = params["we1g"].astype(xf.dtype) if cfg.glu_experts else None
-        plan = kops.make_moe_plan(info.idx, info.gates, n, e)
-        if (impl.startswith("pallas_fused")
-                and kops.fused_supported(n, d, cfg.expert_size, cfg.activation,
-                                         xf.dtype, glu=cfg.glu_experts)):
-            return kops.moe_mlp_fused(
-                xf, plan, w1, w2, w1g, activation=cfg.activation,
-                interpret=True if impl.endswith("_interpret") else None)
-        # unfused pallas: gather/sort at the XLA level, plan reused by all
-        # three grouped GEMMs (and their backward) — no layout recompute.
-        interpret = kops._impl_interpret(impl)
-        src = jnp.repeat(jnp.arange(n), k)[plan.perm]     # sorted rows' tokens
-        x_sorted = xf[src]                                # (N*K, d) gathered rows
-        h = kops.cvmm_planned(x_sorted, plan, w1, interpret=interpret)
-        hg = (kops.cvmm_planned(x_sorted, plan, w1g, interpret=interpret)
-              if cfg.glu_experts else None)
-        u = _expert_ffn(cfg, h, hg)
-        y_sorted = kops.cvmm_planned(u, plan, w2, interpret=interpret)
-        g_flat = info.gates.reshape(-1)
-        y_sorted = y_sorted * g_flat[plan.perm][:, None].astype(y_sorted.dtype)
-        out = jnp.zeros_like(xf)
-        return out.at[src].add(y_sorted)
-
-    e_flat = info.idx.reshape(-1)                         # (N*K,)
-    g_flat = info.gates.reshape(-1)
-    tok = jnp.repeat(jnp.arange(n), k)
-
-    perm = jnp.argsort(e_flat, stable=True)               # CVMM preprocessing sort
-    e_sorted = e_flat[perm]
-    x_sorted = xf[tok[perm]]                              # (N*K, d) gathered rows
-    group_sizes = jnp.bincount(e_sorted, length=e)        # (E,)
-
-    h = kops.cvmm(x_sorted, group_sizes, params["we1"].astype(xf.dtype),
-                  impl=impl)
-    if cfg.glu_experts:
-        hg = kops.cvmm(x_sorted, group_sizes, params["we1g"].astype(xf.dtype),
-                       impl=impl)
-    else:
-        hg = None
-    u = _expert_ffn(cfg, h, hg)
-    y_sorted = kops.cvmm(u, group_sizes, params["we2"].astype(xf.dtype),
-                         impl=impl)
-    y_sorted = y_sorted * g_flat[perm][:, None].astype(y_sorted.dtype)
-
-    out = jnp.zeros_like(xf)
-    out = out.at[tok[perm]].add(y_sorted)
-    return out
-
-
-# ---------------------------------------------------------------------------
-# Path 2: einsum (GShard capacity dispatch, pure pjit)
-# ---------------------------------------------------------------------------
-
-def _capacity(n_tokens: int, k: int, e: int, factor: float, multiple: int = 8) -> int:
-    return max(multiple, round_up(int(cdiv(n_tokens * k, e) * factor), multiple))
-
-
-def _pack_capacity(xf, info: SelectionInfo, e: int, cap: int):
-    """Scatter tokens into an (E, C, d) buffer. Returns buffer + combine metadata."""
-    n, d = xf.shape
-    k = info.idx.shape[-1]
-    e_flat = info.idx.reshape(-1)
-    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)       # (NK, E)
-    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1   # rank in expert
-    keep = pos < cap
-    tok = jnp.repeat(jnp.arange(n), k)
-    e_safe = jnp.where(keep, e_flat, 0)
-    p_safe = jnp.where(keep, pos, 0)
-    buf = jnp.zeros((e, cap, d), xf.dtype)
-    buf = buf.at[e_safe, p_safe].add(xf[tok] * keep[:, None].astype(xf.dtype),
-                                     mode="drop")
-    return buf, (tok, e_safe, p_safe, keep)
-
-
-def _combine_capacity(buf_out, info: SelectionInfo, meta, n: int) -> jax.Array:
-    tok, e_safe, p_safe, keep = meta
-    g_flat = info.gates.reshape(-1)
-    rows = buf_out[e_safe, p_safe]                            # (NK, d)
-    rows = rows * (g_flat * keep.astype(g_flat.dtype))[:, None].astype(rows.dtype)
-    out = jnp.zeros((n, buf_out.shape[-1]), buf_out.dtype)
-    return out.at[tok].add(rows, mode="drop")
-
-
-def _apply_einsum(params: Dict, xf: jax.Array, cfg: FFNConfig, info: SelectionInfo,
-                  e: int) -> Tuple[jax.Array, jax.Array]:
-    n, d = xf.shape
-    cap = _capacity(n, cfg.k, e, cfg.capacity_factor)
-    buf, meta = _pack_capacity(xf, info, e, cap)
-    # Constrain the buffer to expert-sharding so GSPMD materializes the dispatch
-    # collective here rather than all-gathering the expert weights.
-    if current_mesh() is not None:
-        buf = jax.lax.with_sharding_constraint(
-            buf, jax.sharding.NamedSharding(current_mesh(), P("model", None, None)))
-    h = jnp.einsum("ecd,edg->ecg", buf, params["we1"].astype(xf.dtype))
-    hg = (jnp.einsum("ecd,edg->ecg", buf, params["we1g"].astype(xf.dtype))
-          if cfg.glu_experts else None)
-    u = _expert_ffn(cfg, h, hg)
-    buf_out = jnp.einsum("ecg,egd->ecd", u, params["we2"].astype(xf.dtype))
-    if current_mesh() is not None:
-        buf_out = jax.lax.with_sharding_constraint(
-            buf_out, jax.sharding.NamedSharding(current_mesh(), P("model", None, None)))
-    y = _combine_capacity(buf_out, info, meta, n)
-    dropped = 1.0 - jnp.mean(meta[3].astype(jnp.float32))
-    return y, dropped
-
-
-# ---------------------------------------------------------------------------
-# Path 3: shard_map (explicit all_to_all expert parallelism)
-# ---------------------------------------------------------------------------
-
-def _apply_shard_map(params: Dict, xf: jax.Array, cfg: FFNConfig,
-                     info: SelectionInfo, e: int) -> Tuple[jax.Array, jax.Array]:
-    """Explicit EP (GShard pattern): tokens sharded over EVERY mesh axis; expert
-    weights sharded over 'model'.
-
-    Per device: pack its token block into an (E, C, d) capacity buffer, one
-    all_to_all along 'model' (split experts, concat capacity) -> (E/mp, C*mp, d),
-    local FFN with the resident expert shard, inverse all_to_all, local combine.
-    Exactly 2 all_to_alls per MoE layer -- the collective-minimal dispatch that the
-    einsum/GSPMD path only approximates (see EXPERIMENTS.md SPerf).
-    """
-    mesh = current_mesh()
-    n, d = xf.shape
-    if mesh is None or "model" not in mesh.axis_names:
-        return _apply_einsum(params, xf, cfg, info, e)
-    mp = mesh.shape["model"]
-    all_axes = tuple(mesh.axis_names)
-    n_shards = 1
-    for a in all_axes:
-        n_shards *= mesh.shape[a]
-    if n % n_shards or e % mp or (n // n_shards) == 0:
-        # token count or expert count not tileable (tiny decode batches):
-        # fall back to the einsum path.
-        return _apply_einsum(params, xf, cfg, info, e)
-
-    cap = _capacity(n // n_shards, cfg.k, e, cfg.capacity_factor)
-
-    def local(xl, idxl, gatesl, w1, w2, w1g=None):
-        # xl: (n_local, d); w1: (E/mp, d, g); w1g only present with GLU —
-        # the non-GLU path neither ships nor multiplies a dummy gate weight.
-        infol = SelectionInfo(probs=jnp.zeros((xl.shape[0], e), xl.dtype),
-                              sel=jnp.zeros((xl.shape[0], e), xl.dtype),
-                              idx=idxl, gates=gatesl)
-        buf, meta = _pack_capacity(xl, infol, e, cap)          # (E, C, d)
-        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
-                                 tiled=True)                   # (E/mp, C*mp, d)
-        h = jnp.einsum("ecd,edg->ecg", buf, w1)
-        hg = jnp.einsum("ecd,edg->ecg", buf, w1g) if w1g is not None else None
-        u = _expert_ffn(cfg, h, hg)
-        out = jnp.einsum("ecg,egd->ecd", u, w2)                # (E/mp, C*mp, d)
-        out = jax.lax.all_to_all(out, "model", split_axis=1, concat_axis=0,
-                                 tiled=True)                   # (E, C, d)
-        y = _combine_capacity(out, infol, meta, xl.shape[0])
-        dropped = 1.0 - jnp.mean(meta[3].astype(jnp.float32))
-        return y, jax.lax.pmean(dropped, all_axes)
-
-    tok_spec = P(all_axes, None)
-    w_spec = P("model", None, None)
-    weights = (params["we1"].astype(xf.dtype), params["we2"].astype(xf.dtype))
-    if cfg.glu_experts:
-        weights += (params["we1g"].astype(xf.dtype),)
-    y, dropped = _shard_map(
-        local, mesh=mesh,
-        in_specs=(tok_spec,) * 3 + (w_spec,) * len(weights),
-        out_specs=(tok_spec, P()),
-    )(xf, info.idx, info.gates, *weights)
-    return y, dropped
-
-
-# ---------------------------------------------------------------------------
-# Public apply
+# Public apply: routing + the shared execution layer
 # ---------------------------------------------------------------------------
 
 def apply_moe(params: Dict, x: jax.Array, cfg: FFNConfig, *,
@@ -346,14 +115,7 @@ def apply_moe(params: Dict, x: jax.Array, cfg: FFNConfig, *,
     e = params["we1"].shape[0]                             # possibly padded
 
     info = _route(params, xf, cfg, rng, train, e)
-
-    dropped = jnp.float32(0.0)
-    if cfg.dispatch == "sort":
-        y = _apply_sort(params, xf, cfg, info, e)
-    elif cfg.dispatch == "shard_map":
-        y, dropped = _apply_shard_map(params, xf, cfg, info, e)
-    else:
-        y, dropped = _apply_einsum(params, xf, cfg, info, e)
+    y, dropped = expert_mlp(params, xf, cfg, info, e)
 
     if cfg.n_shared_experts:
         act = act_fn(cfg.activation)

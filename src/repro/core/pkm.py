@@ -8,6 +8,17 @@ Modifications made by the paper (which we follow):
     both are available via cfg.activation,
   - optionally the paper's dense-equivalent init ('PKM + init' row of Tab. 6).
 
+Framework lowering (paper Sec. 2 / core/dispatch.py): under the unified view a
+PKM *is* an expert_size-1 MoE — the PEER heads of "Mixture of A Million
+Experts" are exactly this. Retrieval (``pkm_select``: the product-key
+Cartesian top-K) produces a ``dispatch.Selection`` over the ns^2 value rows
+(vidx -> row ids, w -> weights), and aggregation executes through the shared
+planned layer (``dispatch.weighted_value_sum``): the value table stays in HBM
+and the selected rows stream through the run-batched row-DMA gather kernels.
+The dense (N, H, K, d_model) value take + einsum survives only as the
+``impl="dense"`` oracle reference (``_aggregate_dense``) and the einsum
+fallback rung of the chain.
+
 Key property (tested): applying top-K to u_a and u_b before the Cartesian combine
 yields K^2 candidates that PROVABLY contain the true top-K of the full
 u[i] = u_a[i mod sqrt(dff)] + u_b[i // sqrt(dff)].
@@ -21,13 +32,19 @@ import jax.numpy as jnp
 
 from ..configs.base import FFNConfig
 from . import init as initlib
+from .dispatch import (Selection, base_aux, resolve_impl, selection_usage,
+                       weighted_value_sum)
 
 
 def init_pkm(key, d_model: int, cfg: FFNConfig, n_layers: int,
-             dtype=jnp.float32) -> Dict:
+             dtype=jnp.float32, ep_degree: int = 0) -> Dict:
+    del ep_degree                      # uniform registry signature; PKM has no EP
     ka, kb, kv = jax.random.split(key, 3)
     h, ns = cfg.pkm_heads, cfg.n_subkeys
     half = d_model // 2
+    # n_values is DERIVED from n_subkeys (cfg.n_values = ns**2, validated in
+    # FFNConfig.validate): the value-table allocation and the paper's
+    # dense-equivalent init std below always agree by construction.
     if cfg.sigma_moe_init:
         s_k = initlib.dense_std_in(d_model, n_layers)
         s_v = initlib.dense_std_out(cfg.n_values, n_layers)
@@ -37,19 +54,19 @@ def init_pkm(key, d_model: int, cfg: FFNConfig, n_layers: int,
     return {
         "keys_a": initlib.normal(ka, (h, half, ns), s_k, dtype),
         "keys_b": initlib.normal(kb, (h, half, ns), s_k, dtype),
-        "values": initlib.normal(kv, (ns * ns, d_model), s_v, dtype),
+        "values": initlib.normal(kv, (cfg.n_values, d_model), s_v, dtype),
     }
 
 
-def apply_pkm(params: Dict, x: jax.Array, cfg: FFNConfig) -> Tuple[jax.Array, Dict]:
-    h, ns, knn = cfg.pkm_heads, cfg.n_subkeys, cfg.pkm_knn
-    lead = x.shape[:-1]
-    d = x.shape[-1]
-    xf = x.reshape(-1, d)
-    xa, xb = jnp.split(xf, 2, axis=-1)                       # (N, d/2) each
+def pkm_select(params: Dict, xf: jax.Array, cfg: FFNConfig) -> Selection:
+    """Product-key retrieval: the selection rule of the framework.
 
-    ua = jnp.einsum("nd,hds->nhs", xa, params["keys_a"].astype(x.dtype))  # (N, H, ns)
-    ub = jnp.einsum("nd,hds->nhs", xb, params["keys_b"].astype(x.dtype))
+    Returns a Selection over the ns^2 value rows with S = H * K slots per
+    token (idx (N, H*K), weights (N, H*K))."""
+    h, ns, knn = cfg.pkm_heads, cfg.n_subkeys, cfg.pkm_knn
+    xa, xb = jnp.split(xf, 2, axis=-1)                       # (N, d/2) each
+    ua = jnp.einsum("nd,hds->nhs", xa, params["keys_a"].astype(xf.dtype))  # (N, H, ns)
+    ub = jnp.einsum("nd,hds->nhs", xb, params["keys_b"].astype(xf.dtype))
 
     va, ia = jax.lax.top_k(ua, knn)                          # (N, H, K)
     vb, ib = jax.lax.top_k(ub, knn)
@@ -69,9 +86,34 @@ def apply_pkm(params: Dict, x: jax.Array, cfg: FFNConfig) -> Tuple[jax.Array, Di
     else:  # relu -- the paper's non-competitive choice
         w = jax.nn.relu(top)
 
-    vals = params["values"].astype(x.dtype)[vidx]            # (N, H, K, d)
-    y = jnp.einsum("nhk,nhkd->nd", w.astype(vals.dtype), vals)
-    return y.reshape(*lead, d), {}
+    n = xf.shape[0]
+    return Selection(idx=vidx.reshape(n, h * knn),
+                     weights=w.reshape(n, h * knn), n_items=cfg.n_values)
+
+
+def _aggregate_dense(values: jax.Array, sel: Selection) -> jax.Array:
+    """impl="dense" oracle: the pre-refactor (N, S, d) take + einsum."""
+    vals = values[sel.idx]                                   # (N, S, d)
+    return jnp.einsum("ns,nsd->nd", sel.weights.astype(vals.dtype), vals)
+
+
+def apply_pkm(params: Dict, x: jax.Array, cfg: FFNConfig, *,
+              rng=None, train: bool = False,
+              collect_stats: bool = False) -> Tuple[jax.Array, Dict]:
+    del rng, train                     # uniform registry signature; PKM is static
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    sel = pkm_select(params, xf, cfg)
+    values = params["values"].astype(x.dtype)
+    if resolve_impl(cfg) == "dense":
+        y = _aggregate_dense(values, sel)
+    else:
+        y = weighted_value_sum(values, sel, xf.shape[0], cfg)
+    aux = base_aux()
+    if collect_stats:
+        aux["usage"] = selection_usage(sel)                  # value-usage histogram
+    return y.reshape(*lead, d), aux
 
 
 def pkm_full_scores(params: Dict, x: jax.Array, cfg: FFNConfig) -> jax.Array:

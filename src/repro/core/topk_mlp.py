@@ -5,7 +5,18 @@ Functional init/apply convention used across the repo::
     params = init_*(key, d_model, cfg, n_layers, dtype)
     y, aux = apply_*(params, x, cfg, ...)
 
-x: (..., d_model). aux is a dict of scalars (regularizer losses etc.).
+x: (..., d_model). aux follows the uniform contract (dispatch.base_aux).
+
+Framework lowering (paper Sec. 2 / core/dispatch.py): the top-K activation is
+the framework's simplest non-trivial selection rule — ``lax.top_k`` over
+u = act(W1 x) picks K of the d_ff rows of W2, and the down-projection is the
+shared weighted aggregation primitive (``dispatch.weighted_value_sum`` with
+W2 as the value table): only the K surviving activations flow through the
+planned gather-sum instead of the dense (..., d_ff) @ W2 matmul the mask used
+to pay for. The paper's caveat stands: the full up-projection is still
+computed to *find* the top-K (Sec. 3.1), so only the down-projection is
+sparse. The masked dense down-projection survives as the ``impl="dense"``
+oracle reference (``_down_dense``).
 """
 from __future__ import annotations
 
@@ -17,10 +28,13 @@ import jax.numpy as jnp
 from ..common import act_fn
 from ..configs.base import FFNConfig
 from . import init as initlib
+from .dispatch import (Selection, base_aux, resolve_impl, selection_usage,
+                       weighted_value_sum)
 
 
 def init_dense(key, d_model: int, cfg: FFNConfig, n_layers: int,
-               dtype=jnp.float32) -> Dict:
+               dtype=jnp.float32, ep_degree: int = 0) -> Dict:
+    del ep_degree                      # uniform registry signature; no EP here
     k1, k2, k3 = jax.random.split(key, 3)
     s1 = initlib.dense_std_in(d_model, n_layers)
     s2 = initlib.dense_std_out(cfg.d_ff, n_layers)
@@ -33,20 +47,49 @@ def init_dense(key, d_model: int, cfg: FFNConfig, n_layers: int,
     return p
 
 
-def apply_dense(params: Dict, x: jax.Array, cfg: FFNConfig) -> Tuple[jax.Array, Dict]:
+def _down_dense(u: jax.Array, w2: jax.Array, k: int) -> jax.Array:
+    """impl="dense" oracle: arg-topk mask (Eq. 6-7) + full down-projection.
+
+    With ReLU, u >= 0, so thresholding at the K-th largest value zeroes
+    exactly the complement set; the sparse path below computes the identical
+    sum from the K selected rows directly."""
+    kth = jax.lax.top_k(u, k)[0][..., -1:]
+    u = jnp.where(u >= kth, u, 0.0).astype(u.dtype)
+    return jnp.einsum("...f,fd->...d", u, w2)
+
+
+def apply_dense(params: Dict, x: jax.Array, cfg: FFNConfig, *,
+                rng=None, train: bool = False,
+                collect_stats: bool = False) -> Tuple[jax.Array, Dict]:
     """dense | glu | topk. Top-K (Sec. 3.1): keep the K largest activations of u.
 
     Note (paper): top-K saves only the DOWN-projection compute; the full up-projection
     u = act(W1 x) is still required to *find* the top-K.
     """
+    del rng, train                     # uniform registry signature; no dropout here
     act = act_fn(cfg.activation)
+    aux = base_aux()
     u = act(jnp.einsum("...d,df->...f", x, params["w1"].astype(x.dtype)))
     if cfg.kind == "glu":
         u = u * jnp.einsum("...d,df->...f", x, params["w3"].astype(x.dtype))
+    w2 = params["w2"].astype(x.dtype)
     if cfg.kind == "topk" and cfg.topk_k and cfg.topk_k < cfg.d_ff:
-        # arg-topk mask (Eq. 6-7). With ReLU, u >= 0, so thresholding at the K-th
-        # largest value zeroes exactly the complement set.
-        kth = jax.lax.top_k(u, cfg.topk_k)[0][..., -1:]
-        u = jnp.where(u >= kth, u, 0.0).astype(u.dtype)
-    y = jnp.einsum("...f,fd->...d", u, params["w2"].astype(x.dtype))
-    return y, {}
+        lead = x.shape[:-1]
+        uf = u.reshape(-1, cfg.d_ff)
+        if resolve_impl(cfg) == "dense":
+            y = _down_dense(uf, w2, cfg.topk_k)
+            if collect_stats:
+                vals, idx = jax.lax.top_k(uf, cfg.topk_k)
+                aux["usage"] = selection_usage(
+                    Selection(idx=idx, weights=vals, n_items=cfg.d_ff))
+            return y.reshape(*lead, -1), aux
+        # Sparse down-projection through the shared planned layer: the K
+        # surviving activations are the selection weights, W2 the value table.
+        vals, idx = jax.lax.top_k(uf, cfg.topk_k)
+        sel = Selection(idx=idx, weights=vals, n_items=cfg.d_ff)
+        y = weighted_value_sum(w2, sel, uf.shape[0], cfg)
+        if collect_stats:
+            aux["usage"] = selection_usage(sel)              # channel usage
+        return y.reshape(*lead, -1), aux
+    y = jnp.einsum("...f,fd->...d", u, w2)
+    return y, aux

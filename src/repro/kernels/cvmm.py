@@ -69,8 +69,13 @@ Fused/streamed pipeline (one HBM round-trip per matmul, nothing else)
       either operand is ever materialized in HBM.
   cvmm_gather_rows_pallas  the pipeline as a bare gather: unsorted HBM rows
       -> tile-aligned (M_pad, K) layout, zeros on slack. No longer on the
-      training path (backward streams instead); kept as the streamed-gather
-      primitive and its direct test surface.
+      MoE training path (backward streams instead), but — with the optional
+      ``weight_tiles`` epilogue (per-row multiply in VMEM) — it is the
+      execution kernel of the framework's weighted value aggregation
+      (ops.gathered_weighted_sum): PKM value lookup and the top-K MLP's
+      sparse down-projection gather their selected rows through it, so the
+      value table never needs whole-array residency and no (N, S, d) dense
+      gather is materialized at the XLA level.
 
 VMEM working set per grid step: two (TM, K) gather buffers + the (pipelined)
 weight/operand and output tiles — independent of the activation row count
@@ -488,26 +493,65 @@ def _gather_rows_kernel(row_src_ref, run_start_ref, run_off_ref, x_hbm, o_ref,
     o_ref[...] = xs_ref[slot]
 
 
+def _gather_rows_weighted_kernel(row_src_ref, run_start_ref, run_off_ref,
+                                 x_hbm, w_ref, o_ref, xs_ref, sem_ref):
+    i = pl.program_id(0)
+    slot = _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm,
+                        xs_ref, sem_ref)
+    o_ref[...] = (xs_ref[slot].astype(jnp.float32)
+                  * w_ref[0][:, None]).astype(o_ref.dtype)
+
+
+def gather_tile_fits(k_pad: int, bytes_per_el: int) -> bool:
+    """Residency gate for the streamed gather kernel's per-step working set:
+    two (TM, K) scratch buffers plus the blocked output tile at 2x for
+    Mosaic's pipeline double-buffering. As everywhere in the streamed family,
+    the HBM operand's row count never appears — it is not VMEM-resident."""
+    ws = (N_BUFFERS * TM * k_pad * bytes_per_el
+          + 2 * TM * k_pad * bytes_per_el)
+    return ws <= VMEM_BUDGET
+
+
 def cvmm_gather_rows_pallas(x: jax.Array, row_src: jax.Array,
                             run_start: jax.Array, run_off: jax.Array,
+                            weight_tiles: jax.Array | None = None,
                             *, interpret: bool = False) -> jax.Array:
     """Streamed gather: unsorted HBM rows -> tile-aligned (M_pad, K_pad) copy.
 
     The same run-batched double-buffered DMA pipeline as the fused w1 kernel,
     with the scratch tile written straight to the blocked output (slack slots
-    zero). No longer called by the fused backward pass — dW/dX stream their
-    operands in place — but kept as the bare streamed-gather primitive (and
-    the pipeline's direct test surface)."""
+    zero). ``weight_tiles`` (M_pad//TM, TM) float32, if given, scales each
+    gathered row in the epilogue — the fused lowering of the framework's
+    weighted value aggregation (PKM values, top-K W2 rows): the per-row
+    weight multiply never becomes a separate XLA pass, and slack rows stay
+    exactly zero (zero-filled scratch times the plan's zero weight). No
+    longer called by the fused MoE backward — dW/dX stream their operands in
+    place — but the bare form remains the pipeline's direct test surface."""
     n_rows, k_pad = x.shape
     m_pad = row_src.shape[0]
     assert m_pad % TM == 0 and k_pad % LANE == 0
+    if not gather_tile_fits(k_pad, x.dtype.itemsize):
+        raise ValueError(
+            f"streamed gather tile working set exceeds VMEM budget for "
+            f"K_pad={k_pad}; gate calls with ops.gather_supported")
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
+    operands = [row_src, run_start, run_off, x]
+    if weight_tiles is None:
+        kernel = _gather_rows_kernel
+        out_spec = pl.BlockSpec((TM, k_pad), lambda i, rs, rst, rl: (i, 0))
+    else:
+        assert weight_tiles.shape == (m_pad // TM, TM)
+        kernel = _gather_rows_weighted_kernel
+        in_specs.append(pl.BlockSpec((1, TM), lambda i, rs, rst, rl: (i, 0)))
+        operands.append(weight_tiles)
+        out_spec = pl.BlockSpec((TM, k_pad), lambda i, rs, rst, rl: (i, 0))
     return pl.pallas_call(
-        _gather_rows_kernel,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(m_pad // TM,),
-            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
-            out_specs=pl.BlockSpec((TM, k_pad), lambda i, rs, rst, rl: (i, 0)),
+            in_specs=in_specs,
+            out_specs=out_spec,
             scratch_shapes=[pltpu.VMEM((N_BUFFERS, TM, k_pad), x.dtype),
                             pltpu.SemaphoreType.DMA((N_BUFFERS,))],
         ),
@@ -515,7 +559,7 @@ def cvmm_gather_rows_pallas(x: jax.Array, row_src: jax.Array,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(row_src, run_start, run_off, x)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------

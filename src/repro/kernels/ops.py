@@ -25,12 +25,19 @@ Backends
 The public ``cvmm(x, group_sizes, w)`` takes rows already *sorted by expert*
 (group_sizes sums to rows) and returns x[i] @ w[expert(i)].
 
-Layout plan
------------
+Layout plans
+------------
 ``CvmmPlan`` (see kernels/cvmm.py for the field contract) is computed ONCE per
 MoE call by ``make_moe_plan`` and reused by every kernel launch of that call,
 forward and backward. ``_tile_layout`` is the single source of the tile-aligned
 layout math; nothing recomputes it downstream of a plan.
+
+``GatherPlan`` (``make_gather_plan`` + ``gathered_weighted_sum``) is the
+expert_size-1 degenerate for the framework's weighted value aggregation —
+PKM values, top-K W2 rows (core/dispatch.weighted_value_sum): no grouped
+GEMM, only the run-batched streamed row-DMA gather with a fused per-row
+weight epilogue and the scatter back to tokens. Shares ``_plan_runs`` and
+the custom_vjp plan-threading discipline with the MoE pipeline.
 """
 from __future__ import annotations
 
@@ -46,8 +53,9 @@ from ..common import act_fn, round_up
 from . import ref as refk
 from .cvmm import (FUSIBLE_ACTIVATIONS, LANE, TM, _pick_tn, _RUN_SIZES,
                    cvmm_dw_pallas, cvmm_dw_streamed_pallas,
-                   cvmm_fused_w1_pallas, cvmm_fused_w2_pallas, cvmm_pallas,
-                   fused_w1_tn, streamed_dw_tile)
+                   cvmm_fused_w1_pallas, cvmm_fused_w2_pallas,
+                   cvmm_gather_rows_pallas, cvmm_pallas, fused_w1_tn,
+                   gather_tile_fits, streamed_dw_tile)
 
 _FORCED_IMPL: Optional[str] = None
 
@@ -240,6 +248,147 @@ def _mask_empty(dw: jax.Array, group_sizes: jax.Array) -> jax.Array:
     # Blocks of experts with zero rows are never visited by the dW kernel
     # (their padded group has no tiles) and stay uninitialized.
     return jnp.where((group_sizes > 0)[:, None, None], dw, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Weighted row-gather plan (the framework's shared retrieval+aggregation
+# primitive: PKM value lookup and the top-K MLP's sparse down-projection)
+# ---------------------------------------------------------------------------
+
+class GatherPlan(NamedTuple):
+    """Layout metadata for one planned weighted row gather-sum.
+
+    The expert_size-1 degenerate of ``CvmmPlan``: each selected "expert" is a
+    single row of a value table (PKM values, W2 rows), so there is no grouped
+    GEMM and no expert-pure tiling — only the run-batched streamed row-DMA
+    pipeline, a per-slot weight, and the scatter back to tokens. Slots are in
+    flat (token, slot) order padded to a TM multiple; the table is shared by
+    forward and backward (custom_vjp residuals — no layout recompute). All
+    int fields get float0 cotangents; ``weight_tiles`` is the one
+    differentiable leaf (grads flow back to the selection scores)."""
+    row_src: jax.Array       # (M_pad,) source row in the value table;
+                             #   sentinel n_rows on slack slots
+    tok_src: jax.Array       # (M_pad,) destination token of each slot;
+                             #   sentinel n_tokens on slack
+    run_start: jax.Array     # (M_pad,) per-tile DMA chunk table — same
+    run_len: jax.Array       #   contract as CvmmPlan (ops._plan_runs)
+    run_off: jax.Array       # (M_pad//TM * 9,) per-tile size-class bounds
+    weight_tiles: jax.Array  # (M_pad//TM, TM) float32 weight per slot, 0 on
+                             #   slack — fused into the gather epilogue
+
+    @property
+    def m_pad(self) -> int:
+        return self.weight_tiles.shape[0] * TM
+
+
+def make_gather_plan(idx: jax.Array, weights: jax.Array,
+                     n_rows: int) -> GatherPlan:
+    """Build the GatherPlan for one weighted aggregation call.
+
+    idx (N, S) int row ids into a value table of ``n_rows`` rows, weights
+    (N, S) aggregation weights. Differentiable in ``weights``. Slots keep the
+    flat (token, s) order — no sort: there is no per-expert weight block to
+    amortize, and the run batching still collapses whatever contiguity the
+    selection happens to have."""
+    n_tokens, s = idx.shape
+    m = n_tokens * s
+    m_pad = round_up(m, TM)
+    row_src = jnp.pad(idx.reshape(-1).astype(jnp.int32), (0, m_pad - m),
+                      constant_values=n_rows)
+    tok_src = jnp.pad(jnp.repeat(jnp.arange(n_tokens, dtype=jnp.int32), s),
+                      (0, m_pad - m), constant_values=n_tokens)
+    run_start, run_len, run_off = _plan_runs(row_src, n_rows)
+    w_pad = jnp.pad(weights.reshape(-1).astype(jnp.float32), (0, m_pad - m))
+    return GatherPlan(row_src=row_src, tok_src=tok_src, run_start=run_start,
+                      run_len=run_len, run_off=run_off,
+                      weight_tiles=w_pad.reshape(m_pad // TM, TM))
+
+
+def gather_supported(d_model: int, dtype=jnp.float32) -> bool:
+    """Gate for the planned weighted-gather path: tile-level residency only.
+
+    Mirrors ``fused_supported``/``pallas_supported`` for the streamed gather
+    kernel — the value-table row count and the selection size never appear
+    (both live in HBM); only a feature dim whose (TM, d_pad) tile working set
+    cannot fit VMEM falls back to the XLA take+einsum rung."""
+    return gather_tile_fits(round_up(d_model, LANE),
+                            jnp.dtype(dtype).itemsize)
+
+
+def _gws_impl(static, values_pad, row_src, tok_src, run_start, run_off,
+              weight_tiles):
+    n_tokens, fuse_weights, interpret = static
+    if fuse_weights:
+        rows = cvmm_gather_rows_pallas(values_pad, row_src, run_start, run_off,
+                                       weight_tiles, interpret=interpret)
+    else:
+        # unfused rung: bare streamed gather, weight multiply at the XLA level
+        rows = cvmm_gather_rows_pallas(values_pad, row_src, run_start, run_off,
+                                       interpret=interpret)
+        rows = (rows.astype(jnp.float32)
+                * weight_tiles.reshape(-1)[:, None]).astype(rows.dtype)
+    out = jnp.zeros((n_tokens, values_pad.shape[1]), rows.dtype)
+    # slack slots carry the sentinel token — out of bounds, dropped here.
+    return out.at[tok_src].add(rows, mode="drop")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gathered_weighted_sum(static, values_pad, row_src, tok_src, run_start,
+                           run_off, weight_tiles):
+    return _gws_impl(static, values_pad, row_src, tok_src, run_start, run_off,
+                     weight_tiles)
+
+
+def _gws_fwd(static, values_pad, row_src, tok_src, run_start, run_off,
+             weight_tiles):
+    y = _gws_impl(static, values_pad, row_src, tok_src, run_start, run_off,
+                  weight_tiles)
+    return y, (values_pad, row_src, tok_src, run_start, run_off, weight_tiles)
+
+
+def _gws_bwd(static, res, dy):
+    _, _, interpret = static
+    values_pad, row_src, tok_src, run_start, run_off, weight_tiles = res
+    w_flat = weight_tiles.reshape(-1)
+    # Per-slot cotangent rows: sentinel tokens (slack) zero-fill.
+    dy_rows = jnp.take(dy, tok_src, axis=0, mode="fill", fill_value=0)
+    # dweight[s] = dy[tok[s]] . values[row_src[s]]: re-stream the un-weighted
+    # gather through the same plan (the fused forward never materialized it).
+    g = cvmm_gather_rows_pallas(values_pad, row_src, run_start, run_off,
+                                interpret=interpret)
+    dweights = jnp.sum(g.astype(jnp.float32) * dy_rows.astype(jnp.float32),
+                       axis=1)
+    dvalues = jnp.zeros_like(values_pad).at[row_src].add(
+        (dy_rows.astype(jnp.float32) * w_flat[:, None]).astype(
+            values_pad.dtype), mode="drop")
+    return (dvalues, _float0(row_src), _float0(tok_src), _float0(run_start),
+            _float0(run_off), dweights.reshape(weight_tiles.shape))
+
+
+_gathered_weighted_sum.defvjp(_gws_fwd, _gws_bwd)
+
+
+def gathered_weighted_sum(values: jax.Array, plan: GatherPlan, n_tokens: int,
+                          *, fuse_weights: bool = True,
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """Planned weighted row gather-sum: y[t] = sum_{s: tok[s]=t} w[s] * V[row[s]].
+
+    The framework's shared retrieval+aggregation primitive executed through
+    the streamed row-DMA pipeline: the value table stays unsorted in HBM
+    (``pltpu.ANY``) and double-buffers (TM, d) row tiles through VMEM, so no
+    (N, S, d) dense value gather is ever materialized at the XLA level. PKM
+    value aggregation (V = the (n_values, d) value table, S = H*K) and the
+    top-K MLP's sparse down-projection (V = W2 rows, S = K) both lower here
+    via core/dispatch.weighted_value_sum. ``fuse_weights=False`` is the
+    unfused rung: same streamed gather, weight multiply as an XLA pass."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d = values.shape[-1]
+    y = _gathered_weighted_sum((n_tokens, fuse_weights, interpret),
+                               _pad_lane(values, 1), plan.row_src,
+                               plan.tok_src, plan.run_start, plan.run_off,
+                               plan.weight_tiles)
+    return y[:, :d]
 
 
 # ---------------------------------------------------------------------------

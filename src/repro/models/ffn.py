@@ -1,16 +1,28 @@
-"""FFN dispatcher: wires the paper's approximators (core/) into model blocks.
+"""FFN registry: wires the paper's approximators (core/) into model blocks.
 
 Any architecture can swap its FFN via ``FFNConfig.kind`` — this is exactly the
 paper's thesis (the technique applies to *every* MLP block, at any scale).
+
+``FFN_REGISTRY`` maps each kind to one ``FFNEntry(init, apply)`` with a
+uniform contract instead of parallel if-chains:
+
+    init(key, d_model, cfg, n_layers, dtype, ep_degree) -> params dict
+    apply(params, x, cfg, *, rng, train, collect_stats) -> (y, aux)
+
+where ``aux`` always carries the same keys (``moe_reg``, ``moe_dropped`` —
+see core/dispatch.base_aux) plus ``usage`` (a selection-usage histogram:
+experts, PKM values, or top-K channels) when ``collect_stats=True``. Model
+code (stack.py) therefore sums aux uniformly with zero per-kind fabrication.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import FFNConfig
+from ..core.dispatch import base_aux
 from ..core.moe import apply_moe, init_moe
 from ..core.pkm import apply_pkm, init_pkm
 from ..core.topk_mlp import apply_dense, init_dense
@@ -18,27 +30,41 @@ from ..core.topk_mlp import apply_dense, init_dense
 MOE_KINDS = ("sigma_moe", "switch", "sbase", "noisy_topk")
 
 
+class FFNEntry(NamedTuple):
+    """One approximator: paired (init, apply) with the uniform contract."""
+    init: Callable[..., Dict]
+    apply: Callable[..., Tuple[jax.Array, Dict]]
+
+
+def _init_none(key, d_model: int, cfg: FFNConfig, n_layers: int,
+               dtype=jnp.float32, ep_degree: int = 0) -> Dict:
+    return {}
+
+
+def _apply_none(params: Dict, x: jax.Array, cfg: FFNConfig, *,
+                rng=None, train: bool = False,
+                collect_stats: bool = False) -> Tuple[jax.Array, Dict]:
+    return jnp.zeros_like(x), base_aux()
+
+
+FFN_REGISTRY: Dict[str, FFNEntry] = {
+    "dense": FFNEntry(init_dense, apply_dense),
+    "glu": FFNEntry(init_dense, apply_dense),
+    "topk": FFNEntry(init_dense, apply_dense),
+    "pkm": FFNEntry(init_pkm, apply_pkm),
+    "none": FFNEntry(_init_none, _apply_none),
+    **{kind: FFNEntry(init_moe, apply_moe) for kind in MOE_KINDS},
+}
+
+
 def init_ffn(key, d_model: int, cfg: FFNConfig, n_layers: int,
              dtype=jnp.float32, ep_degree: int = 0) -> Dict:
-    if cfg.kind == "none":
-        return {}
-    if cfg.kind in MOE_KINDS:
-        return init_moe(key, d_model, cfg, n_layers, dtype, ep_degree)
-    if cfg.kind == "pkm":
-        return init_pkm(key, d_model, cfg, n_layers, dtype)
-    return init_dense(key, d_model, cfg, n_layers, dtype)
+    return FFN_REGISTRY[cfg.kind].init(key, d_model, cfg, n_layers, dtype,
+                                       ep_degree)
 
 
 def apply_ffn(params: Dict, x: jax.Array, cfg: FFNConfig, *,
-              rng: Optional[jax.Array] = None, train: bool = False
-              ) -> Tuple[jax.Array, Dict]:
-    zero_aux = {"moe_reg": jnp.float32(0.0), "moe_dropped": jnp.float32(0.0)}
-    if cfg.kind == "none":
-        return jnp.zeros_like(x), zero_aux
-    if cfg.kind in MOE_KINDS:
-        return apply_moe(params, x, cfg, rng=rng, train=train)
-    if cfg.kind == "pkm":
-        y, _ = apply_pkm(params, x, cfg)
-        return y, zero_aux
-    y, _ = apply_dense(params, x, cfg)
-    return y, zero_aux
+              rng: Optional[jax.Array] = None, train: bool = False,
+              collect_stats: bool = False) -> Tuple[jax.Array, Dict]:
+    return FFN_REGISTRY[cfg.kind].apply(params, x, cfg, rng=rng, train=train,
+                                        collect_stats=collect_stats)

@@ -1,0 +1,408 @@
+"""The unified selection -> planned-execution layer (core/dispatch.py).
+
+Covers the PR-5 refactor contract:
+  - PKM value aggregation and the top-K MLP's down-projection lower to the
+    shared ``weighted_value_sum`` primitive (GatherPlan + streamed row-DMA
+    gather kernels) and match their dense references forward AND backward,
+    plus the ``pkm_full_scores`` oracle.
+  - The capability chain pallas_fused -> pallas -> einsum degrades
+    identically on unsupported shapes for every approximator.
+  - Tripwires: the planned rungs never materialize the dense (N, S, d) value
+    gather (``dispatch.dense_value_gather``) nor the dense masked
+    down-projection (``topk_mlp._down_dense``) — and they really do go
+    through the streamed gather kernel.
+  - The uniform aux contract of the FFN registry (models/ffn.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import moe_ffn
+from repro.configs.base import FFNConfig
+from repro.core import (apply_dense, apply_moe, apply_pkm, init_dense,
+                        init_moe, init_pkm, pkm_full_scores, pkm_select,
+                        value_sum_path, weighted_value_sum)
+from repro.core import dispatch, topk_mlp
+from repro.core.dispatch import Selection
+from repro.kernels import cvmm, ops
+
+D = 32
+PLANNED = ("pallas_fused_interpret", "pallas_interpret", "einsum")
+
+
+def _pkm_cfg(impl="auto", **kw):
+    kw.setdefault("n_subkeys", 8)
+    kw.setdefault("pkm_heads", 2)
+    kw.setdefault("pkm_knn", 4)
+    kw.setdefault("activation", "relu")
+    return FFNConfig(kind="pkm", impl=impl, **kw)
+
+
+def _topk_cfg(impl="auto", **kw):
+    kw.setdefault("d_ff", 64)
+    kw.setdefault("topk_k", 8)
+    kw.setdefault("activation", "relu")
+    return FFNConfig(kind="topk", impl=impl, **kw)
+
+
+# ---------------------------------------------------------------------------
+# GatherPlan / gathered_weighted_sum (ops level)
+# ---------------------------------------------------------------------------
+
+def _gws_reference(values, idx, weights, n_tokens):
+    return jnp.einsum("ns,nsd->nd", weights.astype(values.dtype), values[idx])
+
+
+def test_gather_plan_layout():
+    """row_src/tok_src/weight_tiles describe the same flat selection; slack
+    slots carry sentinels and zero weight; the run table replays the gather."""
+    n, s, r = 50, 6, 37
+    key = jax.random.PRNGKey(0)
+    idx = jax.random.randint(key, (n, s), 0, r)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, s))
+    plan = ops.make_gather_plan(idx, w, r)
+    m = n * s
+    assert plan.m_pad % ops.TM == 0 and plan.m_pad >= m
+    row_src = np.asarray(plan.row_src)
+    tok_src = np.asarray(plan.tok_src)
+    wt = np.asarray(plan.weight_tiles).reshape(-1)
+    np.testing.assert_array_equal(row_src[:m], np.asarray(idx).reshape(-1))
+    np.testing.assert_array_equal(tok_src[:m],
+                                  np.repeat(np.arange(n), s))
+    np.testing.assert_allclose(wt[:m], np.asarray(w).reshape(-1), rtol=1e-6)
+    assert (row_src[m:] == r).all() and (tok_src[m:] == n).all()
+    assert (wt[m:] == 0).all()
+    # the run table drives the streamed kernel to exactly take-with-zero-fill
+    vals = jax.random.normal(jax.random.PRNGKey(2), (r, 128))
+    got = cvmm.cvmm_gather_rows_pallas(vals, plan.row_src, plan.run_start,
+                                       plan.run_off, interpret=True)
+    want = jnp.take(vals, plan.row_src, axis=0, mode="fill", fill_value=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("fuse_weights", [True, False])
+def test_gathered_weighted_sum_matches_reference(dtype, fuse_weights):
+    n, s, r, d = 45, 5, 20, 24
+    idx = jax.random.randint(jax.random.PRNGKey(0), (n, s), 0, r)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, s), jnp.float32)
+    vals = jax.random.normal(jax.random.PRNGKey(2), (r, d),
+                             jnp.float32).astype(dtype)
+    plan = ops.make_gather_plan(idx, w, r)
+    got = ops.gathered_weighted_sum(vals, plan, n, fuse_weights=fuse_weights,
+                                    interpret=True)
+    want = _gws_reference(vals, idx, w, n)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_gathered_weighted_sum_grads_match_reference():
+    n, s, r, d = 30, 4, 16, 24
+    idx = jax.random.randint(jax.random.PRNGKey(0), (n, s), 0, r)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, s), jnp.float32)
+    vals = jax.random.normal(jax.random.PRNGKey(2), (r, d), jnp.float32)
+    probe = lambda y: jnp.sum(y * jnp.cos(jnp.arange(y.size).reshape(y.shape)))
+
+    def loss(vals, w):
+        plan = ops.make_gather_plan(idx, w, r)
+        return probe(ops.gathered_weighted_sum(vals, plan, n, interpret=True))
+
+    gv, gw = jax.grad(loss, argnums=(0, 1))(vals, w)
+    rv, rw = jax.grad(lambda v, w: probe(_gws_reference(v, idx, w, n)),
+                      argnums=(0, 1))(vals, w)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(rv),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# PKM via the planned layer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", PLANNED)
+@pytest.mark.parametrize("relu", [True, False])
+def test_pkm_planned_matches_dense(impl, relu):
+    """Every chain rung == the dense (N, H, K, d) take+einsum reference."""
+    cfg = _pkm_cfg(activation="relu" if relu else "softmax")
+    p = init_pkm(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 6, D))
+    yd, _ = apply_pkm(p, x, dataclasses.replace(cfg, impl="dense"))
+    yp, _ = apply_pkm(p, x, dataclasses.replace(cfg, impl=impl))
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yp),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_pkm_planned_grads_match_dense():
+    """fwd+bwd parity: gradients wrt keys, values AND the input flow through
+    the GatherPlan (weight_tiles -> retrieval scores) exactly as through the
+    dense reference."""
+    cfg = _pkm_cfg(impl="pallas_fused_interpret")
+    cfg_d = dataclasses.replace(cfg, impl="dense")
+    p = init_pkm(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, D))
+    probe = lambda y: jnp.sum(y * jnp.cos(jnp.arange(y.size).reshape(y.shape)))
+    gp, gx = jax.grad(lambda p, x: probe(apply_pkm(p, x, cfg)[0]),
+                      argnums=(0, 1))(p, x)
+    rp, rx = jax.grad(lambda p, x: probe(apply_pkm(p, x, cfg_d)[0]),
+                      argnums=(0, 1))(p, x)
+    for name in rp:
+        np.testing.assert_allclose(np.asarray(gp[name]), np.asarray(rp[name]),
+                                   atol=1e-4, rtol=1e-4, err_msg=name)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pkm_planned_matches_full_scores_oracle():
+    """Aggregating the true top-K of the FULL score vector (the O(N*ns^2)
+    oracle) == the planned product-key path, per head: the Cartesian
+    retrieval provably contains the true top-K (Sec. 3.2), so the whole
+    pipeline — retrieval + planned aggregation — must reproduce the oracle."""
+    cfg = _pkm_cfg(impl="pallas_fused_interpret")
+    p = init_pkm(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+    full = pkm_full_scores(p, x, cfg)                        # (N, H, ns^2)
+    top, vidx = jax.lax.top_k(full, cfg.pkm_knn)             # true top-K
+    w = jax.nn.relu(top)
+    want = jnp.einsum("nhk,nhkd->nd", w, p["values"][vidx])
+    got, _ = apply_pkm(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pkm_planned_never_materializes_dense_gather(monkeypatch):
+    """Acceptance tripwire: on the planned rungs no (N, S, d) dense value
+    gather may be materialized — and the streamed gather kernel must actually
+    be what executes the aggregation."""
+    def boom(*a, **kw):
+        raise AssertionError("planned path materialized the dense value gather")
+
+    called = {"kernel": 0}
+    orig = cvmm.cvmm_gather_rows_pallas
+
+    def spy(*a, **kw):
+        called["kernel"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(dispatch, "dense_value_gather", boom)
+    monkeypatch.setattr(cvmm, "cvmm_gather_rows_pallas", spy)
+    monkeypatch.setattr(ops, "cvmm_gather_rows_pallas", spy)
+    cfg = _pkm_cfg(impl="pallas_fused_interpret")
+    p = init_pkm(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+    y, _ = apply_pkm(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    assert called["kernel"] >= 1
+    g = jax.grad(lambda p: apply_pkm(p, x, cfg)[0].sum())(p)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# ---------------------------------------------------------------------------
+# Top-K MLP sparse down-projection via the planned layer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", PLANNED)
+@pytest.mark.parametrize("activation", ["relu", "gelu"])
+def test_topk_sparse_down_matches_dense(impl, activation):
+    """The sparse down-projection (K selected W2 rows through the planned
+    gather-sum) == the masked full (..., d_ff) @ W2 reference, including for
+    activations with negative surviving values (gelu)."""
+    cfg = _topk_cfg(activation=activation)
+    p = init_dense(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 7, D))
+    yd, _ = apply_dense(p, x, dataclasses.replace(cfg, impl="dense"))
+    yp, _ = apply_dense(p, x, dataclasses.replace(cfg, impl=impl))
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yp),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_topk_sparse_down_grads_match_dense():
+    cfg = _topk_cfg(impl="pallas_fused_interpret")
+    cfg_d = dataclasses.replace(cfg, impl="dense")
+    p = init_dense(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (20, D))
+    probe = lambda y: jnp.sum(y * jnp.sin(jnp.arange(y.size).reshape(y.shape)))
+    gp, gx = jax.grad(lambda p, x: probe(apply_dense(p, x, cfg)[0]),
+                      argnums=(0, 1))(p, x)
+    rp, rx = jax.grad(lambda p, x: probe(apply_dense(p, x, cfg_d)[0]),
+                      argnums=(0, 1))(p, x)
+    for name in rp:
+        np.testing.assert_allclose(np.asarray(gp[name]), np.asarray(rp[name]),
+                                   atol=1e-4, rtol=1e-4, err_msg=name)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_topk_planned_never_runs_dense_down(monkeypatch):
+    """Tripwire: the planned top-K path must not fall back to the dense
+    masked down-projection nor the dense value gather."""
+    def boom(*a, **kw):
+        raise AssertionError("planned top-K ran the dense down-projection")
+
+    monkeypatch.setattr(topk_mlp, "_down_dense", boom)
+    monkeypatch.setattr(dispatch, "dense_value_gather", boom)
+    cfg = _topk_cfg(impl="pallas_fused_interpret")
+    p = init_dense(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+    y, _ = apply_dense(p, x, cfg)
+    g = jax.grad(lambda p: apply_dense(p, x, cfg)[0].sum())(p)
+    assert np.isfinite(np.asarray(y)).all()
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_topk_equals_dense_mlp_when_k_is_dff():
+    """K = d_ff: the planned sparse path degenerates to the plain dense MLP."""
+    cfg_t = _topk_cfg(impl="pallas_fused_interpret", topk_k=64)
+    cfg_d = FFNConfig(kind="dense", d_ff=64, activation="relu")
+    p = init_dense(jax.random.PRNGKey(0), D, cfg_d, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+    yt, _ = apply_dense(p, x, cfg_t)
+    yd, _ = apply_dense(p, x, cfg_d)
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(yd),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Capability fallback chain — identical degradation for every approximator
+# ---------------------------------------------------------------------------
+
+def test_fallback_chain_degrades_identically(monkeypatch):
+    """Starve VMEM so no streamed tile fits: every approximator on a
+    pallas(_fused) impl must degrade to its XLA rung (einsum take+sum for the
+    weighted-value primitives, ragged grouped matmul for MoE) with identical
+    numerics — never a trace-time error, never a kernel launch."""
+    def boom(*a, **kw):
+        raise AssertionError("kernel launched despite failing capability gate")
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+
+    # references on untouched budget
+    cfg_p = _pkm_cfg()
+    pp = init_pkm(jax.random.PRNGKey(0), D, cfg_p, 2)
+    yp_ref, _ = apply_pkm(pp, x, dataclasses.replace(cfg_p, impl="einsum"))
+    cfg_t = _topk_cfg()
+    pt = init_dense(jax.random.PRNGKey(0), D, cfg_t, 2)
+    yt_ref, _ = apply_dense(pt, x, dataclasses.replace(cfg_t, impl="einsum"))
+    cfg_m = moe_ffn(4, 16, 2, dispatch="sort")
+    pm = init_moe(jax.random.PRNGKey(0), D, cfg_m, 2)
+    ym_ref, _ = apply_moe(pm, x, dataclasses.replace(cfg_m, impl="ragged"))
+
+    monkeypatch.setattr(cvmm, "VMEM_BUDGET", 1 << 10)
+    assert not ops.gather_supported(D)
+    assert not ops.pallas_supported(D, cfg_m.expert_size)
+    monkeypatch.setattr(cvmm, "cvmm_gather_rows_pallas", boom)
+    monkeypatch.setattr(ops, "cvmm_gather_rows_pallas", boom)
+    monkeypatch.setattr(ops, "moe_mlp_fused", boom)
+    monkeypatch.setattr(ops, "cvmm_planned", boom)
+
+    for impl in ("pallas_fused_interpret", "pallas_interpret"):
+        yp, _ = apply_pkm(pp, x, dataclasses.replace(cfg_p, impl=impl))
+        np.testing.assert_allclose(np.asarray(yp), np.asarray(yp_ref),
+                                   atol=1e-6, err_msg=f"pkm/{impl}")
+        yt, _ = apply_dense(pt, x, dataclasses.replace(cfg_t, impl=impl))
+        np.testing.assert_allclose(np.asarray(yt), np.asarray(yt_ref),
+                                   atol=1e-6, err_msg=f"topk/{impl}")
+        ym, _ = apply_moe(pm, x, dataclasses.replace(cfg_m, impl=impl))
+        np.testing.assert_allclose(np.asarray(ym), np.asarray(ym_ref),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"moe/{impl}")
+
+
+def test_value_sum_path_reporting(monkeypatch):
+    """value_sum_path mirrors the chain weighted_value_sum takes."""
+    assert value_sum_path(_pkm_cfg(impl="pallas_fused_interpret"), D) == \
+        "pallas_fused"
+    assert value_sum_path(_pkm_cfg(impl="pallas_interpret"), D) == "pallas"
+    assert value_sum_path(_pkm_cfg(impl="einsum"), D) == "einsum"
+    assert value_sum_path(_pkm_cfg(impl="dense"), D) == "dense"
+    monkeypatch.setattr(cvmm, "VMEM_BUDGET", 1 << 10)
+    assert value_sum_path(_pkm_cfg(impl="pallas_fused_interpret"), D) == \
+        "einsum"
+
+
+def test_impl_knob_overrides_global_default(monkeypatch):
+    """cfg.impl forces the rung regardless of ops.default_impl(); "auto"
+    defers to it (set_default_impl still honored)."""
+    called = {"n": 0}
+    orig = ops.gathered_weighted_sum
+
+    def spy(*a, **kw):
+        called["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(ops, "gathered_weighted_sum", spy)
+    cfg = _pkm_cfg(impl="einsum")
+    p = init_pkm(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, D))
+    apply_pkm(p, x, cfg)
+    assert called["n"] == 0                      # einsum rung: no planned call
+    ops.set_default_impl("pallas_fused_interpret")
+    try:
+        apply_pkm(p, x, dataclasses.replace(cfg, impl="auto"))
+    finally:
+        ops.set_default_impl(None)
+    assert called["n"] == 1                      # auto deferred to the default
+
+
+# ---------------------------------------------------------------------------
+# Uniform aux contract (models/ffn.py registry)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [
+    FFNConfig(kind="dense", d_ff=64),
+    FFNConfig(kind="glu", d_ff=64, activation="silu"),
+    _topk_cfg(),
+    _pkm_cfg(),
+    moe_ffn(4, 16, 2, dispatch="sort", reg_gamma=0.01),
+    FFNConfig(kind="none"),
+], ids=lambda c: c.kind)
+def test_registry_uniform_aux_contract(cfg):
+    """Every approximator returns the same aux keys; collect_stats adds a
+    usage histogram for every *selecting* approximator (MoE experts, PKM
+    values, top-K channels) — nothing is re-fabricated per branch."""
+    from repro.models.ffn import apply_ffn, init_ffn
+
+    cfg.validate()
+    p = init_ffn(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 5, D))
+    y, aux = apply_ffn(p, x, cfg, rng=jax.random.PRNGKey(2), train=True)
+    assert y.shape == x.shape
+    assert set(aux) == {"moe_reg", "moe_dropped"}
+    y2, aux2 = apply_ffn(p, x, cfg, collect_stats=True)
+    if cfg.kind in ("topk", "pkm", "sigma_moe"):
+        assert "usage" in aux2
+        assert {"counts", "weight", "usage_entropy"} <= set(aux2["usage"])
+    # collecting stats must not perturb the output (train=False both times)
+    y_eval, _ = apply_ffn(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_eval), np.asarray(y2))
+
+
+def test_pkm_usage_histogram_counts_selected_values():
+    """The collect_stats histogram really counts value selections: H*K slots
+    per token, counts sum to N*H*K."""
+    cfg = _pkm_cfg()
+    p = init_pkm(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+    _, aux = apply_pkm(p, x, cfg, collect_stats=True)
+    st = aux["usage"]
+    assert st["counts"].shape == (cfg.n_values,)
+    assert float(st["counts"].sum()) == 16 * cfg.pkm_heads * cfg.pkm_knn
+    sel = pkm_select(p, x, cfg)
+    want = np.bincount(np.asarray(sel.idx).reshape(-1),
+                       minlength=cfg.n_values)
+    np.testing.assert_array_equal(np.asarray(st["counts"], np.int64), want)
+
+
+def test_pkm_config_rejects_stale_d_ff():
+    """configs satellite: a d_ff that disagrees with n_subkeys**2 is an error
+    (a stale value would silently mis-scale the dense-equivalent init)."""
+    FFNConfig(kind="pkm", n_subkeys=8, d_ff=64).validate()      # agrees
+    FFNConfig(kind="pkm", n_subkeys=8).validate()               # unset: fine
+    with pytest.raises(AssertionError):
+        FFNConfig(kind="pkm", n_subkeys=8, d_ff=100).validate()

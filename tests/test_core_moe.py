@@ -153,10 +153,12 @@ def test_usage_stats_detects_collapse():
 @pytest.mark.parametrize("glu", [False, True])
 def test_shard_map_parity_and_no_dummy_glu_weight(glu, monkeypatch):
     """shard_map EP path == einsum path for GLU on AND off, on a real (single
-    device) 'model' mesh so the shard_map branch actually runs. Guards the
-    dummy-w1g fix: the non-GLU path must ship exactly 5 operands through
-    shard_map (no (E,1,1) zeros placeholder, no size-1-broadcast einsum)."""
-    from repro.core import moe as moe_mod
+    device) 'model' mesh so the shard_map branch actually runs (it lives in
+    core/dispatch.py — the shared execution layer — since the PR 5 refactor).
+    Guards the dummy-w1g fix: the non-GLU path must ship exactly 5 operands
+    through shard_map (no (E,1,1) zeros placeholder, no size-1-broadcast
+    einsum)."""
+    from repro.core import dispatch as dispatch_mod
     from repro.sharding import mesh_context
 
     cfg_e = moe_ffn(NE, G, K, dispatch="einsum", capacity_factor=8.0)
@@ -166,7 +168,7 @@ def test_shard_map_parity_and_no_dummy_glu_weight(glu, monkeypatch):
     x = jax.random.normal(jax.random.PRNGKey(0), (16, D))
 
     shipped = {}
-    orig = moe_mod._shard_map
+    orig = dispatch_mod._shard_map
 
     def spy(fn, **kw):
         inner = orig(fn, **kw)
@@ -176,7 +178,7 @@ def test_shard_map_parity_and_no_dummy_glu_weight(glu, monkeypatch):
             return inner(*args)
         return call
 
-    monkeypatch.setattr(moe_mod, "_shard_map", spy)
+    monkeypatch.setattr(dispatch_mod, "_shard_map", spy)
     mesh = jax.make_mesh((1,), ("model",))
     with mesh_context(mesh):
         ye, _ = apply_moe(p, x, cfg_e)
@@ -192,9 +194,10 @@ def test_shard_map_parity_and_no_dummy_glu_weight(glu, monkeypatch):
 
 def test_sort_dispatch_falls_back_to_ragged_when_no_tile_fits(monkeypatch):
     """_pick_tn returning None must not crash the sort path: when even the
-    UNFUSED pallas kernels cannot tile the working set into VMEM, _apply_sort
-    falls back to XLA's ragged grouped matmul instead of raising at trace
-    time (and stays numerically identical to an explicit ragged run)."""
+    UNFUSED pallas kernels cannot tile the working set into VMEM,
+    dispatch._sort_path falls back to XLA's ragged grouped matmul instead of
+    raising at trace time (and stays numerically identical to an explicit
+    ragged run)."""
     from repro.kernels import cvmm, ops as kops
 
     cfg, p, x = _setup("sort")
