@@ -52,10 +52,41 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import round_up
-from repro.kernels import ops
+from repro.kernels import autotune, cvmm, ops
 from repro.kernels.cvmm import LANE, TM, legacy_whole_x_rows
 
 ITERS = 10
+
+
+def _moe_tile_report(cfg: "BenchConfig") -> dict:
+    """The tile choices this config's kernels will actually launch with, plus
+    tuner provenance ("heuristic" = static first-fit, "tuned" = cache/bench
+    winner) — recorded per config so CI can diff tile decisions across runs
+    (the determinism gate) and tuned runs are auditable."""
+    fused = ops.fused_mlp_tiles(cfg.d_model, cfg.expert_size, glu=cfg.glu)
+    pw1 = ops.planned_call_tiles(cfg.d_model, cfg.expert_size)
+    pw2 = ops.planned_call_tiles(cfg.expert_size, cfg.d_model)
+    return {"fused": None if fused is None else fused._asdict(),
+            "planned_w1": None if pw1 is None else pw1._asdict(),
+            "planned_w2": None if pw2 is None else pw2._asdict()}
+
+
+def _gather_tile_report(d_model: int, itemsize: int = 4) -> dict:
+    dec = autotune.gather_tiles(round_up(d_model, LANE), itemsize,
+                                budget=cvmm.VMEM_BUDGET)
+    return {"gather": dec.tiles, "provenance": dec.provenance}
+
+
+def _tune_report() -> dict:
+    """Process-wide tuner telemetry for this bench run. ``microbench_calls``
+    is the CI cache-hit signal: a --tune run against a warm cache must report
+    0 here (pure cache hit, nothing re-measured)."""
+    return {"enabled": autotune.enabled(),
+            "backend": jax.default_backend(),
+            "vmem_budget": cvmm.VMEM_BUDGET,
+            "cache_path": autotune.cache_path() if autotune.enabled()
+            else None,
+            **autotune.STATS}
 
 
 class BenchConfig(NamedTuple):
@@ -139,6 +170,7 @@ def _bench_pkm(cfg: PkmBenchConfig, iters: int) -> dict:
     plan = ops.make_gather_plan(args[1], args[2], cfg.n_values)
     return {"config": cfg._asdict(), "results": results,
             "pkm_speedup_vs_dense": speedup,
+            "tiles": _gather_tile_report(cfg.d_model),
             "dma_descriptors": ops.plan_dma_stats(plan, cfg.n_values)}
 
 
@@ -298,6 +330,7 @@ def _bench_config(cfg: BenchConfig, iters: int, with_bwd: bool) -> dict:
             / max(results["pallas_fused"]["bwd_us"], 1e-9), 3)
     return {"config": cfg._asdict(), "results": results,
             "fused_speedup_vs_pallas": speedup,
+            "tiles": _moe_tile_report(cfg),
             "dma_descriptors": _dma_descriptors(cfg, args[1], args[2])}
 
 
@@ -325,6 +358,8 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
                    "note": "pallas impls run in interpret mode off-TPU"},
         "results": base["results"],
         "fused_speedup_vs_pallas": base["fused_speedup_vs_pallas"],
+        "tiles": base["tiles"],
+        "tune": _tune_report(),
         "dma_descriptors": base["dma_descriptors"],
         "pkm_speedup_vs_dense": pkm["pkm_speedup_vs_dense"],
         "pkm": {**pkm,
@@ -361,6 +396,14 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
         f"{payload['pkm_speedup_vs_dense']['fwd']}x fwd / "
         f"{payload['pkm_speedup_vs_dense']['fwd_bwd']}x fwd+bwd "
         f"(interpret-mode tripwire)")
+    tune = payload["tune"]
+    fused = payload["tiles"]["fused"] or {}
+    rows.append(
+        f"# tiles {fused.get('provenance', 'none')}: "
+        f"w1_tn={fused.get('w1_tn')} w2_tn={fused.get('w2_tn')} "
+        f"dw_tb={fused.get('dw_tb')}; tune enabled={tune['enabled']} "
+        f"microbench_calls={tune['microbench_calls']} "
+        f"cache_hits={tune['cache_hits']}")
     return rows
 
 

@@ -65,10 +65,19 @@ def run():
                                   iters=3)
             finally:
                 kops.set_default_impl(None)
+            # the tiles this config's fused kernels launched with, plus the
+            # tuner provenance (heuristic vs tuned) — so fig2 rows are
+            # attributable to a tile decision when comparing across machines
+            kplan = kops.plan_sort_kernels("pallas_fused", d_model, g,
+                                           mcfg.activation, x.dtype,
+                                           glu=mcfg.glu_experts)
+            tiles = ("none" if kplan.fused is None else
+                     f"{kplan.fused.provenance}:w1_tn={kplan.fused.w1_tn}:"
+                     f"w2_tn={kplan.fused.w2_tn}:dw_tb={kplan.fused.dw_tb}")
             rows.append(csv_row(
                 f"fig2/moe_sort_fused_d{d_model}", us_f,
                 f"active_param_bytes={active_bytes};"
-                f"ratio_vs_sort={us_f/us_m:.2f}"))
+                f"ratio_vs_sort={us_f/us_m:.2f};tiles={tiles}"))
 
     # The streamed-gather regime: a token count PAST the retired whole-x VMEM
     # residency boundary, where the pre-streaming gate rejected the fused path

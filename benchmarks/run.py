@@ -3,6 +3,13 @@ hot-path micro-benchmark (bench_cvmm -> BENCH_cvmm.json).
 
     PYTHONPATH=src python -m benchmarks.run [--steps N] [--only tableX]
     PYTHONPATH=src python -m benchmarks.run --quick    # smoke: cvmm + fig2
+    PYTHONPATH=src python -m benchmarks.run --quick --tune  # pre-warm tile cache
+
+``--tune`` turns on the kernel autotuner (kernels/autotune.py) for this run:
+tile choices come from the persistent on-disk cache, micro-benchmarking any
+missing (kernel, shape, dtype, backend) keys once and storing the winners, so
+a subsequent run — bench or training — is a pure cache hit. Without it the
+tuner stays in zero-cost heuristic mode (the CI default).
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark.
 """
@@ -20,7 +27,16 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fast smoke subset (%s) with reduced iters" %
                          ",".join(QUICK))
+    ap.add_argument("--tune", action="store_true",
+                    help="enable the kernel autotuner: micro-bench uncached "
+                         "tile candidates and persist winners to the on-disk "
+                         "cache (pre-warms it for later runs)")
     args = ap.parse_args()
+
+    if args.tune:
+        from repro.kernels import autotune
+        autotune.enable(True)
+        print(f"# autotune on: cache={autotune.cache_path()}", flush=True)
 
     from . import (bench_cvmm, fig1_active_channels, fig2_exec_time,
                    fig3_expert_usage, table1_topk, table2_pkm,
@@ -50,6 +66,9 @@ def main() -> None:
             failures += 1
             print(f"{name},nan,ERROR={type(e).__name__}:{e}", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if args.tune:
+        from repro.kernels import autotune
+        print(f"# autotune stats: {autotune.STATS}", flush=True)
     if failures:
         sys.exit(1)
 

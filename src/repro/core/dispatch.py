@@ -198,35 +198,43 @@ def _sort_path(params: Dict, xf: jax.Array, cfg: FFNConfig,
         # XLA-native rung of the sort path is the ragged grouped matmul.
         impl = "ragged"
 
-    if (impl.startswith("pallas")
-            and not kops.pallas_supported(d, cfg.expert_size, xf.dtype)):
-        # Even the unfused kernels cannot tile this d_model/expert_size into
-        # VMEM (_pick_tn returns None and the kernels raise rather than
-        # compile a VMEM-exhausting tn=128): fall back to XLA's grouped
-        # matmul instead of failing at trace time.
-        impl = "ragged"
+    if impl.startswith("pallas"):
+        # One resolution for the whole call: the rung of the capability chain
+        # AND the tile choices come from the same tuner queries
+        # (kernels/autotune.py), so "no tile fits" degradation and "which
+        # tile" can never disagree. rung == "ragged" covers the old
+        # pallas_supported() fallback: even the unfused kernels cannot tile
+        # this d_model/expert_size into VMEM — use XLA's grouped matmul
+        # instead of failing at trace time.
+        kplan = kops.plan_sort_kernels(impl, d, cfg.expert_size,
+                                       cfg.activation, xf.dtype,
+                                       glu=cfg.glu_experts)
+        if kplan.rung == "ragged":
+            impl = "ragged"
 
     if impl.startswith("pallas"):
         w1 = params["we1"].astype(xf.dtype)
         w2 = params["we2"].astype(xf.dtype)
         w1g = params["we1g"].astype(xf.dtype) if cfg.glu_experts else None
         plan = kops.make_moe_plan(info.idx, info.gates, n, e)
-        if (impl.startswith("pallas_fused")
-                and kops.fused_supported(n, d, cfg.expert_size, cfg.activation,
-                                         xf.dtype, glu=cfg.glu_experts)):
+        if kplan.rung == "pallas_fused":
             return kops.moe_mlp_fused(
                 xf, plan, w1, w2, w1g, activation=cfg.activation,
-                interpret=True if impl.endswith("_interpret") else None)
+                interpret=True if impl.endswith("_interpret") else None,
+                tiles=kplan.fused)
         # unfused pallas: gather/sort at the XLA level, plan reused by all
         # three grouped GEMMs (and their backward) — no layout recompute.
         interpret = kops._impl_interpret(impl)
         src = jnp.repeat(jnp.arange(n), k)[plan.perm]     # sorted rows' tokens
         x_sorted = xf[src]                                # (N*K, d) gathered rows
-        h = kops.cvmm_planned(x_sorted, plan, w1, interpret=interpret)
-        hg = (kops.cvmm_planned(x_sorted, plan, w1g, interpret=interpret)
+        h = kops.cvmm_planned(x_sorted, plan, w1, interpret=interpret,
+                              tiles=kplan.planned_w1)
+        hg = (kops.cvmm_planned(x_sorted, plan, w1g, interpret=interpret,
+                                tiles=kplan.planned_w1)
               if cfg.glu_experts else None)
         u = _expert_ffn(cfg, h, hg)
-        y_sorted = kops.cvmm_planned(u, plan, w2, interpret=interpret)
+        y_sorted = kops.cvmm_planned(u, plan, w2, interpret=interpret,
+                                     tiles=kplan.planned_w2)
         g_flat = info.gates.reshape(-1)
         y_sorted = y_sorted * g_flat[plan.perm][:, None].astype(y_sorted.dtype)
         out = jnp.zeros_like(xf)

@@ -1,3 +1,3 @@
-from . import compat, ops, ref
+from . import autotune, compat, ops, ref
 
-__all__ = ["compat", "ops", "ref"]
+__all__ = ["autotune", "compat", "ops", "ref"]

@@ -83,6 +83,30 @@ weight/operand and output tiles — independent of the activation row count
 gates on this tile-level residency only, forward AND backward kernels).
 
 dX on tile-aligned operands reuses cvmm_pallas with w transposed.
+
+Tuning
+------
+Tile choices come from kernels/autotune.py. Every picker below (``_pick_tn``,
+``fused_w1_tn``, ``streamed_dw_tile``, ``gather_tile_fits``) is a thin query
+into the tuner, threading this module's ``VMEM_BUDGET`` (itself derived from
+the active ``roofline.analysis.Hardware`` model — tests monkeypatch the
+module attribute to shrink every picker at once). With tuning DISABLED (the
+default, and what interpret-mode CI runs) the tuner answers with the static
+heuristic — the largest LANE multiple dividing the padded width whose working
+set fits — at zero cost, no I/O. With tuning ENABLED (``REPRO_AUTOTUNE=1`` /
+``benchmarks.run --tune``) candidates are roofline-pruned and micro-benchmarked
+once per (kernel, shape-class, dtype, backend) key, and winners persist to
+``~/.cache/repro/autotune/<backend>.json`` (override the directory with
+``REPRO_AUTOTUNE_CACHE``). Pre-warm a new backend with::
+
+    python -m benchmarks.run --quick --tune
+
+Interpret-mode timings only rank candidates relative to each other on the
+interpreter's cost surface — they are NOT TPU numbers; the on-disk cache is
+keyed per backend precisely so a CPU-tuned cache never leaks into TPU runs.
+Every kernel entry point also accepts explicit tile arguments (``tn`` / ``tb``
+/ ``n_buffers``) so ops.py can resolve tiles once per plan and thread them
+through forward and backward instead of re-querying per call.
 """
 from __future__ import annotations
 
@@ -94,12 +118,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..common import act_fn
+from . import autotune
+from .autotune import LANE, TM
 from .compat import tpu_compiler_params
 
-TM = 128            # row tile (MXU-aligned)
-LANE = 128          # lane multiple for K / N
-VMEM_BUDGET = 12 * 1024 * 1024
-N_BUFFERS = 2       # gather scratch slots (double buffering)
+# Per-kernel VMEM working-set budget. Derived from the active Hardware model
+# (0.75 * vmem_bytes = 12 MiB on the TPU model; $REPRO_VMEM_BUDGET overrides)
+# and read at CALL time by every picker below, so tests that monkeypatch this
+# module attribute shrink all residency gates at once.
+VMEM_BUDGET = autotune.default_vmem_budget()
+N_BUFFERS = 2       # default gather scratch slots (double buffering); the
+                    # tuner may thread a deeper pipeline into any streamed call
 
 # Activations that are elementwise (tile-local) and therefore legal to apply
 # inside a kernel epilogue on an (TM, TN) tile.
@@ -107,19 +136,15 @@ FUSIBLE_ACTIVATIONS = ("relu", "gelu", "silu", "identity")
 
 
 def _pick_tn(k_pad: int, n_pad: int, bytes_per_el: int):
-    """Largest N tile (multiple of 128, <= n_pad) whose working set fits VMEM,
-    or None when even tn=128 does not fit — same contract as ``fused_w1_tn``:
-    callers raise (or gate via ``ops.fused_supported``) instead of compiling a
-    kernel that exhausts VMEM."""
-    for tn in (512, 384, 256, 128):
-        if tn > n_pad:
-            continue
-        if n_pad % tn:
-            continue
-        ws = TM * k_pad * bytes_per_el + k_pad * tn * bytes_per_el + TM * tn * 4
-        if ws <= VMEM_BUDGET:
-            return tn
-    return None
+    """Largest N tile (LANE multiple dividing n_pad) whose working set fits
+    VMEM, or None when even tn=128 does not fit — same contract as
+    ``fused_w1_tn``: callers raise (or gate via ``ops.fused_supported``)
+    instead of compiling a kernel that exhausts VMEM. Thin query into the
+    tuner (kernels/autotune.py): this replaces the old fixed (512, 384, 256,
+    128) ladder, whose divisibility check skipped every larger legal tile for
+    widths like n_pad=640 that are multiples of 128 but of neither 384 nor
+    512."""
+    return autotune.pick_tn(k_pad, n_pad, bytes_per_el, budget=VMEM_BUDGET)
 
 
 def _require_tn(tn, kernel: str, k_pad: int):
@@ -141,16 +166,12 @@ def fused_w1_tn(k_pad: int, g_pad: int, bytes_per_el: int,
     whole-x-resident kernel — the row count does not appear here at all.
     Returns None rather than silently under-tiling when nothing fits: callers
     must fall back to the unfused path instead of compiling a kernel that
-    exhausts VMEM."""
-    scratch = N_BUFFERS * TM * k_pad * bytes_per_el
-    for tn in (512, 384, 256, 128):
-        if tn > g_pad or g_pad % tn:
-            continue
-        ws = scratch + 2 * (n_weights * k_pad * tn * bytes_per_el
-                            + n_out * TM * tn * max(bytes_per_el, 4))
-        if ws <= VMEM_BUDGET:
-            return tn
-    return None
+    exhausts VMEM. Thin query into the tuner (the working-set formula lives in
+    ``autotune.ws_fused_w1``); the full decision — including pipeline depth —
+    is ``autotune.fused_w1_tiles``, which ops.py threads through the plan."""
+    d = autotune.fused_w1_tiles(k_pad, g_pad, bytes_per_el, n_weights, n_out,
+                                budget=VMEM_BUDGET)
+    return None if d.tiles is None else d.tiles["tn"]
 
 
 def streamed_dw_tile(stream_w_pad: int, block_w_pad: int, bytes_per_el: int):
@@ -160,15 +181,11 @@ def streamed_dw_tile(stream_w_pad: int, block_w_pad: int, bytes_per_el: int):
     Working set: two (TM, W_stream) gather scratch buffers, plus the blocked
     (TM, t) operand tile and the (W_stream, t) float32 output block at 2x for
     Mosaic's pipeline double-buffering. As with ``fused_w1_tn``, the streamed
-    operand's row count never appears — it lives in HBM."""
-    scratch = N_BUFFERS * TM * stream_w_pad * bytes_per_el
-    for t in (512, 384, 256, 128):
-        if t > block_w_pad or block_w_pad % t:
-            continue
-        ws = scratch + 2 * (TM * t * bytes_per_el + stream_w_pad * t * 4)
-        if ws <= VMEM_BUDGET:
-            return t
-    return None
+    operand's row count never appears — it lives in HBM. Thin query into the
+    tuner (formula: ``autotune.ws_streamed_dw``)."""
+    d = autotune.streamed_dw_tiles(stream_w_pad, block_w_pad, bytes_per_el,
+                                   budget=VMEM_BUDGET)
+    return None if d.tiles is None else d.tiles["tb"]
 
 
 def legacy_whole_x_rows(k_pad: int, bytes_per_el: int, n_weights: int,
@@ -200,14 +217,17 @@ def _fwd_kernel(tile_expert_ref, x_ref, w_ref, o_ref):
 
 
 def cvmm_pallas(x_pad: jax.Array, tile_expert: jax.Array, w: jax.Array,
-                *, interpret: bool = False) -> jax.Array:
+                *, interpret: bool = False,
+                tn: int | None = None) -> jax.Array:
     """x_pad (M_pad, K_pad) sorted+tile-aligned rows; tile_expert (M_pad//TM,) int32;
-    w (E, K_pad, N_pad). Returns (M_pad, N_pad)."""
+    w (E, K_pad, N_pad). Returns (M_pad, N_pad). ``tn`` threads a pre-resolved
+    tile choice (ops.py / the tuner); omitted -> heuristic query."""
     m_pad, k_pad = x_pad.shape
     e, k_w, n_pad = w.shape
     assert k_w == k_pad and m_pad % TM == 0 and k_pad % LANE == 0 and n_pad % LANE == 0
-    tn = _require_tn(_pick_tn(k_pad, n_pad, x_pad.dtype.itemsize),
-                     "cvmm_pallas", k_pad)
+    if tn is None:
+        tn = _pick_tn(k_pad, n_pad, x_pad.dtype.itemsize)
+    tn = _require_tn(tn, "cvmm_pallas", k_pad)
     grid = (m_pad // TM, n_pad // tn)
 
     return pl.pallas_call(
@@ -252,15 +272,18 @@ def _dw_kernel(tile_expert_ref, x_ref, g_ref, o_ref):
 
 
 def cvmm_dw_pallas(x_pad: jax.Array, tile_expert: jax.Array, g_pad: jax.Array,
-                   n_experts: int, *, interpret: bool = False) -> jax.Array:
+                   n_experts: int, *, interpret: bool = False,
+                   tk: int | None = None, tn: int | None = None) -> jax.Array:
     """dW (E, K_pad, N_pad) float32 from tile-aligned x (M_pad, K_pad), g (M_pad, N_pad)."""
     m_pad, k_pad = x_pad.shape
     _, n_pad = g_pad.shape
     assert m_pad % TM == 0 and k_pad % LANE == 0 and n_pad % LANE == 0
-    tk = _require_tn(_pick_tn(TM, k_pad, x_pad.dtype.itemsize),
-                     "cvmm_dw_pallas", TM)
-    tn = _require_tn(_pick_tn(TM, n_pad, g_pad.dtype.itemsize),
-                     "cvmm_dw_pallas", TM)
+    if tk is None:
+        tk = _pick_tn(TM, k_pad, x_pad.dtype.itemsize)
+    if tn is None:
+        tn = _pick_tn(TM, n_pad, g_pad.dtype.itemsize)
+    tk = _require_tn(tk, "cvmm_dw_pallas", TM)
+    tn = _require_tn(tn, "cvmm_dw_pallas", TM)
     grid = (k_pad // tk, n_pad // tn, m_pad // TM)
 
     return pl.pallas_call(
@@ -329,62 +352,73 @@ def _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
 
 
 def _gather_issue(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
-                  sem_ref):
-    """Zero slot ``t % N_BUFFERS`` and start the run-batched DMAs of tile ``t``."""
-    slot = jax.lax.rem(t, N_BUFFERS)
+                  sem_ref, n_buffers: int = N_BUFFERS):
+    """Zero slot ``t % n_buffers`` and start the run-batched DMAs of tile ``t``."""
+    slot = jax.lax.rem(t, n_buffers)
     xs_ref[slot] = jnp.zeros(xs_ref.shape[1:], xs_ref.dtype)
     _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
               sem_ref, slot, wait=False)
 
 
 def _gather_wait(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
-                 sem_ref):
+                 sem_ref, n_buffers: int = N_BUFFERS):
     """Wait for every DMA chunk issued by ``_gather_issue`` for tile ``t``."""
-    slot = jax.lax.rem(t, N_BUFFERS)
+    slot = jax.lax.rem(t, n_buffers)
     _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
               sem_ref, slot, wait=True)
 
 
 def _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
-                 sem_ref, *, axis: int = 0):
-    """Double-buffered gather step for row tile ``i`` (grid dim ``axis``,
-    sequential and innermost).
+                 sem_ref, *, axis: int = 0, n_buffers: int = N_BUFFERS):
+    """Pipelined gather step for row tile ``i`` (grid dim ``axis``, sequential
+    and innermost), ``n_buffers`` scratch slots deep.
 
-    Waits for tile ``i``'s chunks (issued one tile earlier; warm-up issues
-    tile 0 inline) and immediately starts tile ``i+1``'s DMAs into the other
-    scratch slot, so the HBM reads of the next tile overlap this tile's MXU
-    work. Returns the slot holding tile ``i``. Kernels whose row-tile loop is
-    an inner grid dimension (the streamed dW kernels) re-enter at i == 0 once
-    per outer pass: the warm-up re-issues tile 0 and the last tile issues no
-    prefetch, so no DMA is left in flight across pass boundaries."""
+    Waits for tile ``i``'s chunks (issued ``n_buffers - 1`` tiles earlier;
+    warm-up issues tiles 0..n_buffers-2 inline) and immediately starts tile
+    ``i + n_buffers - 1``'s DMAs into the slot that just freed, so the HBM
+    reads of upcoming tiles overlap this tile's MXU work. Returns the slot
+    holding tile ``i``. With the default depth 2 this is exactly the classic
+    double buffer: warm-up issues tile 0, each step prefetches tile i+1.
+    Kernels whose row-tile loop is an inner grid dimension (the streamed dW
+    kernels) re-enter at i == 0 once per outer pass: the warm-up re-issues its
+    tiles and prefetches past the last tile are suppressed, so no DMA is left
+    in flight across pass boundaries."""
     m_tiles = pl.num_programs(axis)
 
     @pl.when(i == 0)
     def _warmup():
         _gather_issue(0, row_src_ref, run_start_ref, run_off_ref, x_hbm,
-                      xs_ref, sem_ref)
+                      xs_ref, sem_ref, n_buffers)
+
+    # Deeper pipelines also pre-issue tiles 1..n_buffers-2 (statically
+    # unrolled; guarded — a 1-tile grid must not touch tile 1's chunk table).
+    for t in range(1, n_buffers - 1):
+        @pl.when(jnp.logical_and(i == 0, t < m_tiles))
+        def _warmup_deep(t=t):
+            _gather_issue(t, row_src_ref, run_start_ref, run_off_ref, x_hbm,
+                          xs_ref, sem_ref, n_buffers)
 
     _gather_wait(i, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
-                 sem_ref)
+                 sem_ref, n_buffers)
 
-    @pl.when(i + 1 < m_tiles)
+    @pl.when(i + n_buffers - 1 < m_tiles)
     def _prefetch_next():
-        _gather_issue(i + 1, row_src_ref, run_start_ref, run_off_ref, x_hbm,
-                      xs_ref, sem_ref)
+        _gather_issue(i + n_buffers - 1, row_src_ref, run_start_ref,
+                      run_off_ref, x_hbm, xs_ref, sem_ref, n_buffers)
 
-    return jax.lax.rem(i, N_BUFFERS)
+    return jax.lax.rem(i, n_buffers)
 
 
 def _fused_w1_body(row_src_ref, run_start_ref, run_off_ref, x_hbm, w1_ref,
                    w1g_ref, o_u_ref, o_h_ref, o_hg_ref, xs_ref, sem_ref,
-                   *, act_name: str):
+                   *, act_name: str, n_buffers: int = N_BUFFERS):
     i, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
     def _():
         _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm,
-                     xs_ref, sem_ref)
-    xt = xs_ref[jax.lax.rem(i, N_BUFFERS)]
+                     xs_ref, sem_ref, n_buffers=n_buffers)
+    xt = xs_ref[jax.lax.rem(i, n_buffers)]
     h = jnp.dot(xt, w1_ref[0], preferred_element_type=jnp.float32)
     u = act_fn(act_name)(h)
     if w1g_ref is not None:
@@ -419,7 +453,9 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
                          tile_expert: jax.Array, w1: jax.Array,
                          w1g: jax.Array | None, *, act_name: str,
                          save_preact: bool = False,
-                         interpret: bool = False):
+                         interpret: bool = False,
+                         tn: int | None = None,
+                         n_buffers: int | None = None):
     """Streamed gather-fused grouped GEMM with activation(/GLU) epilogue.
 
     x (N_rows, K_pad) — the UNSORTED activations, left in HBM (``pltpu.ANY``)
@@ -436,7 +472,11 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
 
     ``save_preact=True`` (training: the custom_vjp forward rule) additionally
     writes the pre-activations h (and hg with GLU) in the same grid pass, so
-    the backward pass needs no recompute GEMMs; returns (u, h[, hg])."""
+    the backward pass needs no recompute GEMMs; returns (u, h[, hg]).
+
+    ``tn`` / ``n_buffers`` (the N-tile width and gather pipeline depth) are
+    normally resolved once per plan by ops.py via the tuner and threaded in;
+    when omitted the kernel falls back to the heuristic query itself."""
     n_rows, k_pad = x.shape
     e, k_w, g_pad = w1.shape
     m_pad = row_src.shape[0]
@@ -446,11 +486,13 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
     assert run_off.shape == ((m_pad // TM) * (len(_RUN_SIZES) + 1),)
     n_weights = 2 if w1g is not None else 1
     n_out = (1 + n_weights) if save_preact else 1
-    tn = fused_w1_tn(k_pad, g_pad, x.dtype.itemsize, n_weights, n_out)
+    if tn is None:
+        tn = fused_w1_tn(k_pad, g_pad, x.dtype.itemsize, n_weights, n_out)
     if tn is None:
         raise ValueError(
             f"fused w1 tile working set exceeds VMEM budget for K_pad="
             f"{k_pad}; gate calls with ops.fused_supported")
+    n_buffers = N_BUFFERS if n_buffers is None else n_buffers
     grid = (m_pad // TM, g_pad // tn)
 
     w_spec = pl.BlockSpec((1, k_pad, tn),
@@ -465,7 +507,7 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
         kernel = _k_w1_glu_save if save_preact else _k_w1_glu
     else:
         kernel = _k_w1_save if save_preact else _k_w1
-    kernel = functools.partial(kernel, act_name=act_name)
+    kernel = functools.partial(kernel, act_name=act_name, n_buffers=n_buffers)
 
     out = pl.pallas_call(
         kernel,
@@ -474,8 +516,8 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
             grid=grid,
             in_specs=in_specs,
             out_specs=[o_spec] * n_out,
-            scratch_shapes=[pltpu.VMEM((N_BUFFERS, TM, k_pad), x.dtype),
-                            pltpu.SemaphoreType.DMA((N_BUFFERS,))],
+            scratch_shapes=[pltpu.VMEM((n_buffers, TM, k_pad), x.dtype),
+                            pltpu.SemaphoreType.DMA((n_buffers,))],
         ),
         out_shape=[o_shape] * n_out,
         compiler_params=tpu_compiler_params(
@@ -486,36 +528,39 @@ def cvmm_fused_w1_pallas(x: jax.Array, row_src: jax.Array,
 
 
 def _gather_rows_kernel(row_src_ref, run_start_ref, run_off_ref, x_hbm, o_ref,
-                        xs_ref, sem_ref):
+                        xs_ref, sem_ref, *, n_buffers: int = N_BUFFERS):
     i = pl.program_id(0)
     slot = _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm,
-                        xs_ref, sem_ref)
+                        xs_ref, sem_ref, n_buffers=n_buffers)
     o_ref[...] = xs_ref[slot]
 
 
 def _gather_rows_weighted_kernel(row_src_ref, run_start_ref, run_off_ref,
-                                 x_hbm, w_ref, o_ref, xs_ref, sem_ref):
+                                 x_hbm, w_ref, o_ref, xs_ref, sem_ref,
+                                 *, n_buffers: int = N_BUFFERS):
     i = pl.program_id(0)
     slot = _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm,
-                        xs_ref, sem_ref)
+                        xs_ref, sem_ref, n_buffers=n_buffers)
     o_ref[...] = (xs_ref[slot].astype(jnp.float32)
                   * w_ref[0][:, None]).astype(o_ref.dtype)
 
 
-def gather_tile_fits(k_pad: int, bytes_per_el: int) -> bool:
+def gather_tile_fits(k_pad: int, bytes_per_el: int,
+                     n_buffers: int = N_BUFFERS) -> bool:
     """Residency gate for the streamed gather kernel's per-step working set:
-    two (TM, K) scratch buffers plus the blocked output tile at 2x for
-    Mosaic's pipeline double-buffering. As everywhere in the streamed family,
-    the HBM operand's row count never appears — it is not VMEM-resident."""
-    ws = (N_BUFFERS * TM * k_pad * bytes_per_el
-          + 2 * TM * k_pad * bytes_per_el)
-    return ws <= VMEM_BUDGET
+    ``n_buffers`` (TM, K) scratch buffers plus the blocked output tile at 2x
+    for Mosaic's pipeline double-buffering. As everywhere in the streamed
+    family, the HBM operand's row count never appears — it is not
+    VMEM-resident. Thin query into the tuner (``autotune.ws_gather``)."""
+    return autotune.gather_fits(k_pad, bytes_per_el, n_buffers,
+                                budget=VMEM_BUDGET)
 
 
 def cvmm_gather_rows_pallas(x: jax.Array, row_src: jax.Array,
                             run_start: jax.Array, run_off: jax.Array,
                             weight_tiles: jax.Array | None = None,
-                            *, interpret: bool = False) -> jax.Array:
+                            *, interpret: bool = False,
+                            n_buffers: int | None = None) -> jax.Array:
     """Streamed gather: unsorted HBM rows -> tile-aligned (M_pad, K_pad) copy.
 
     The same run-batched double-buffered DMA pipeline as the fused w1 kernel,
@@ -530,7 +575,8 @@ def cvmm_gather_rows_pallas(x: jax.Array, row_src: jax.Array,
     n_rows, k_pad = x.shape
     m_pad = row_src.shape[0]
     assert m_pad % TM == 0 and k_pad % LANE == 0
-    if not gather_tile_fits(k_pad, x.dtype.itemsize):
+    n_buffers = N_BUFFERS if n_buffers is None else n_buffers
+    if not gather_tile_fits(k_pad, x.dtype.itemsize, n_buffers):
         raise ValueError(
             f"streamed gather tile working set exceeds VMEM budget for "
             f"K_pad={k_pad}; gate calls with ops.gather_supported")
@@ -546,14 +592,14 @@ def cvmm_gather_rows_pallas(x: jax.Array, row_src: jax.Array,
         operands.append(weight_tiles)
         out_spec = pl.BlockSpec((TM, k_pad), lambda i, rs, rst, rl: (i, 0))
     return pl.pallas_call(
-        kernel,
+        functools.partial(kernel, n_buffers=n_buffers),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(m_pad // TM,),
             in_specs=in_specs,
             out_specs=out_spec,
-            scratch_shapes=[pltpu.VMEM((N_BUFFERS, TM, k_pad), x.dtype),
-                            pltpu.SemaphoreType.DMA((N_BUFFERS,))],
+            scratch_shapes=[pltpu.VMEM((n_buffers, TM, k_pad), x.dtype),
+                            pltpu.SemaphoreType.DMA((n_buffers,))],
         ),
         out_shape=jax.ShapeDtypeStruct((m_pad, k_pad), x.dtype),
         compiler_params=tpu_compiler_params(
@@ -582,10 +628,12 @@ def _dw_accumulate(o_ref, acc, first):
         o_ref[0] += acc
 
 
-def _dw_stream_x_kernel(rs, rst, rl, te, x_hbm, g_ref, o_ref, xs_ref, sem_ref):
+def _dw_stream_x_kernel(rs, rst, rl, te, x_hbm, g_ref, o_ref, xs_ref, sem_ref,
+                        *, n_buffers: int = N_BUFFERS):
     # grid (n_tiles, m_tiles), m innermost; the stream restarts per n pass.
     m = pl.program_id(1)
-    slot = _stream_tile(m, rs, rst, rl, x_hbm, xs_ref, sem_ref, axis=1)
+    slot = _stream_tile(m, rs, rst, rl, x_hbm, xs_ref, sem_ref, axis=1,
+                        n_buffers=n_buffers)
     acc = jax.lax.dot_general(xs_ref[slot], g_ref[...],
                               (((0,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)  # (K, tb)
@@ -593,9 +641,10 @@ def _dw_stream_x_kernel(rs, rst, rl, te, x_hbm, g_ref, o_ref, xs_ref, sem_ref):
 
 
 def _dw_stream_g_body(rs, rst, rl, g_hbm, x_ref, gate_ref, o_ref, gs_ref,
-                      sem_ref, te):
+                      sem_ref, te, n_buffers: int = N_BUFFERS):
     m = pl.program_id(1)
-    slot = _stream_tile(m, rs, rst, rl, g_hbm, gs_ref, sem_ref, axis=1)
+    slot = _stream_tile(m, rs, rst, rl, g_hbm, gs_ref, sem_ref, axis=1,
+                        n_buffers=n_buffers)
     gt = gs_ref[slot]
     if gate_ref is not None:
         gt = (gt.astype(jnp.float32) * gate_ref[0][:, None]).astype(gt.dtype)
@@ -604,15 +653,16 @@ def _dw_stream_g_body(rs, rst, rl, g_hbm, x_ref, gate_ref, o_ref, gs_ref,
     _dw_accumulate(o_ref, acc, _dw_first(te, m))
 
 
-def _dw_stream_g_kernel(rs, rst, rl, te, g_hbm, x_ref, o_ref, gs_ref, sem_ref):
+def _dw_stream_g_kernel(rs, rst, rl, te, g_hbm, x_ref, o_ref, gs_ref, sem_ref,
+                        *, n_buffers: int = N_BUFFERS):
     _dw_stream_g_body(rs, rst, rl, g_hbm, x_ref, None, o_ref, gs_ref, sem_ref,
-                      te)
+                      te, n_buffers)
 
 
 def _dw_stream_g_gate_kernel(rs, rst, rl, te, g_hbm, x_ref, gate_ref, o_ref,
-                             gs_ref, sem_ref):
+                             gs_ref, sem_ref, *, n_buffers: int = N_BUFFERS):
     _dw_stream_g_body(rs, rst, rl, g_hbm, x_ref, gate_ref, o_ref, gs_ref,
-                      sem_ref, te)
+                      sem_ref, te, n_buffers)
 
 
 def cvmm_dw_streamed_pallas(x: jax.Array, g: jax.Array, row_src: jax.Array,
@@ -620,7 +670,9 @@ def cvmm_dw_streamed_pallas(x: jax.Array, g: jax.Array, row_src: jax.Array,
                             tile_expert: jax.Array, n_experts: int, *,
                             stream_x: bool,
                             gate_tiles: jax.Array | None = None,
-                            interpret: bool = False) -> jax.Array:
+                            interpret: bool = False,
+                            tb: int | None = None,
+                            n_buffers: int | None = None) -> jax.Array:
     """dW (E, K_pad, N_pad) float32 with ONE operand streamed from unsorted HBM.
 
     stream_x=True : ``x`` is the UNSORTED (N_rows, K_pad) activations, left in
@@ -652,14 +704,16 @@ def cvmm_dw_streamed_pallas(x: jax.Array, g: jax.Array, row_src: jax.Array,
     assert m_pad % TM == 0 and k_pad % LANE == 0 and n_pad % LANE == 0
     assert run_start.shape == (m_pad,)
     assert run_off.shape == ((m_pad // TM) * (len(_RUN_SIZES) + 1),)
-    tb = streamed_dw_tile(stream_w, block_w, sdtype.itemsize)
+    if tb is None:
+        tb = streamed_dw_tile(stream_w, block_w, sdtype.itemsize)
     if tb is None:
         raise ValueError(
             f"streamed dW tile working set exceeds VMEM budget for "
             f"W_stream={stream_w}; gate calls with ops.fused_supported")
+    n_buffers = N_BUFFERS if n_buffers is None else n_buffers
     grid = (block_w // tb, m_pad // TM)
-    scratch = [pltpu.VMEM((N_BUFFERS, TM, stream_w), sdtype),
-               pltpu.SemaphoreType.DMA((N_BUFFERS,))]
+    scratch = [pltpu.VMEM((n_buffers, TM, stream_w), sdtype),
+               pltpu.SemaphoreType.DMA((n_buffers,))]
     blk_spec = pl.BlockSpec((TM, tb), lambda b, m, *s: (m, b))
     if stream_x:
         in_specs = [pl.BlockSpec(memory_space=pltpu.ANY), blk_spec]
@@ -681,7 +735,7 @@ def cvmm_dw_streamed_pallas(x: jax.Array, g: jax.Array, row_src: jax.Array,
             kernel = _dw_stream_g_kernel
 
     return pl.pallas_call(
-        kernel,
+        functools.partial(kernel, n_buffers=n_buffers),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=4,
             grid=grid,
@@ -703,7 +757,8 @@ def _fused_w2_kernel(tile_expert_ref, u_ref, w2_ref, gate_ref, o_ref):
 
 def cvmm_fused_w2_pallas(u_pad: jax.Array, tile_expert: jax.Array,
                          w2: jax.Array, gate_tiles: jax.Array,
-                         *, interpret: bool = False) -> jax.Array:
+                         *, interpret: bool = False,
+                         tn: int | None = None) -> jax.Array:
     """Grouped GEMM with the per-row gate multiply fused into the epilogue.
 
     u_pad (M_pad, G_pad) tile-aligned; w2 (E, G_pad, N_pad);
@@ -713,8 +768,9 @@ def cvmm_fused_w2_pallas(u_pad: jax.Array, tile_expert: jax.Array,
     assert g_w == g_pad and m_pad % TM == 0
     assert g_pad % LANE == 0 and n_pad % LANE == 0
     assert gate_tiles.shape == (m_pad // TM, TM)
-    tn = _require_tn(_pick_tn(g_pad, n_pad, u_pad.dtype.itemsize),
-                     "cvmm_fused_w2_pallas", g_pad)
+    if tn is None:
+        tn = _pick_tn(g_pad, n_pad, u_pad.dtype.itemsize)
+    tn = _require_tn(tn, "cvmm_fused_w2_pallas", g_pad)
     grid = (m_pad // TM, n_pad // tn)
 
     return pl.pallas_call(

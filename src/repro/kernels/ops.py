@@ -50,6 +50,8 @@ import numpy as np
 from jax import dtypes
 
 from ..common import act_fn, round_up
+from . import autotune
+from . import cvmm as cvmm_mod
 from . import ref as refk
 from .cvmm import (FUSIBLE_ACTIVATIONS, LANE, TM, _pick_tn, _RUN_SIZES,
                    cvmm_dw_pallas, cvmm_dw_streamed_pallas,
@@ -317,14 +319,16 @@ def gather_supported(d_model: int, dtype=jnp.float32) -> bool:
 
 def _gws_impl(static, values_pad, row_src, tok_src, run_start, run_off,
               weight_tiles):
-    n_tokens, fuse_weights, interpret = static
+    n_tokens, fuse_weights, interpret, n_buffers = static
     if fuse_weights:
         rows = cvmm_gather_rows_pallas(values_pad, row_src, run_start, run_off,
-                                       weight_tiles, interpret=interpret)
+                                       weight_tiles, interpret=interpret,
+                                       n_buffers=n_buffers)
     else:
         # unfused rung: bare streamed gather, weight multiply at the XLA level
         rows = cvmm_gather_rows_pallas(values_pad, row_src, run_start, run_off,
-                                       interpret=interpret)
+                                       interpret=interpret,
+                                       n_buffers=n_buffers)
         rows = (rows.astype(jnp.float32)
                 * weight_tiles.reshape(-1)[:, None]).astype(rows.dtype)
     out = jnp.zeros((n_tokens, values_pad.shape[1]), rows.dtype)
@@ -347,7 +351,7 @@ def _gws_fwd(static, values_pad, row_src, tok_src, run_start, run_off,
 
 
 def _gws_bwd(static, res, dy):
-    _, _, interpret = static
+    _, _, interpret, n_buffers = static
     values_pad, row_src, tok_src, run_start, run_off, weight_tiles = res
     w_flat = weight_tiles.reshape(-1)
     # Per-slot cotangent rows: sentinel tokens (slack) zero-fill.
@@ -355,7 +359,7 @@ def _gws_bwd(static, res, dy):
     # dweight[s] = dy[tok[s]] . values[row_src[s]]: re-stream the un-weighted
     # gather through the same plan (the fused forward never materialized it).
     g = cvmm_gather_rows_pallas(values_pad, row_src, run_start, run_off,
-                                interpret=interpret)
+                                interpret=interpret, n_buffers=n_buffers)
     dweights = jnp.sum(g.astype(jnp.float32) * dy_rows.astype(jnp.float32),
                        axis=1)
     dvalues = jnp.zeros_like(values_pad).at[row_src].add(
@@ -370,7 +374,8 @@ _gathered_weighted_sum.defvjp(_gws_fwd, _gws_bwd)
 
 def gathered_weighted_sum(values: jax.Array, plan: GatherPlan, n_tokens: int,
                           *, fuse_weights: bool = True,
-                          interpret: Optional[bool] = None) -> jax.Array:
+                          interpret: Optional[bool] = None,
+                          n_buffers: Optional[int] = None) -> jax.Array:
     """Planned weighted row gather-sum: y[t] = sum_{s: tok[s]=t} w[s] * V[row[s]].
 
     The framework's shared retrieval+aggregation primitive executed through
@@ -380,11 +385,18 @@ def gathered_weighted_sum(values: jax.Array, plan: GatherPlan, n_tokens: int,
     value aggregation (V = the (n_values, d) value table, S = H*K) and the
     top-K MLP's sparse down-projection (V = W2 rows, S = K) both lower here
     via core/dispatch.weighted_value_sum. ``fuse_weights=False`` is the
-    unfused rung: same streamed gather, weight multiply as an XLA pass."""
+    unfused rung: same streamed gather, weight multiply as an XLA pass.
+    ``n_buffers`` (gather pipeline depth) is resolved through the tuner when
+    omitted — depth 2 unless a tuned cache says deeper wins."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     d = values.shape[-1]
-    y = _gathered_weighted_sum((n_tokens, fuse_weights, interpret),
+    if n_buffers is None:
+        dec = autotune.gather_tiles(round_up(d, LANE),
+                                    jnp.dtype(values.dtype).itemsize,
+                                    budget=cvmm_mod.VMEM_BUDGET)
+        n_buffers = dec.tiles["n_buffers"] if dec.tiles is not None else None
+    y = _gathered_weighted_sum((n_tokens, fuse_weights, interpret, n_buffers),
                                _pad_lane(values, 1), plan.row_src,
                                plan.tok_src, plan.run_start, plan.run_off,
                                plan.weight_tiles)
@@ -392,26 +404,161 @@ def gathered_weighted_sum(values: jax.Array, plan: GatherPlan, n_tokens: int,
 
 
 # ---------------------------------------------------------------------------
+# Tile decisions (one resolution per plan, threaded through custom_vjp)
+# ---------------------------------------------------------------------------
+# Each planned execution resolves its tile choices ONCE — at plan/dispatch
+# time, through the tuner (kernels/autotune.py) against the call-time
+# cvmm.VMEM_BUDGET — and threads them into every kernel launch of that call,
+# forward and backward, as a hashable static argument. The kernels never
+# re-query; "does any tile fit" (the capability gates below) and "which tile"
+# are literally the same answer. Tiles stay OUT of the plan NamedTuples: plan
+# fields are pytree leaves (traced under jit), tiles must stay static ints.
+
+class FusedTiles(NamedTuple):
+    """Static tile choices for one fused MoE-MLP call (fwd + bwd kernels)."""
+    w1_tn: int        # fused w1, inference (single output)
+    w1_train_tn: int  # fused w1 under vjp (writes preactivations too)
+    t0_tn: int        # backward's gather(dy) @ w2^T streamed GEMM
+    w2_tn: int        # w2 gate-epilogue fwd; also dX bwd (same shape key)
+    dw_tb: int        # streamed dW blocked-width tile (dW1/dW1g/dW2 share it)
+    w1_nb: int        # gather pipeline depths per streamed kernel
+    t0_nb: int
+    dw_nb: int
+    provenance: str   # "heuristic" | "tuned" (any constituent tuned -> tuned)
+
+
+class PlannedTiles(NamedTuple):
+    """Static tile choices for one planned unfused grouped GEMM (fwd + bwd)."""
+    fwd_tn: int       # x @ w
+    dx_tn: int        # g @ w^T
+    dw_tk: int        # dW outer-product K tile
+    dw_tn: int        # dW outer-product N tile
+    provenance: str
+
+
+def _merge_prov(*decisions) -> str:
+    return ("tuned" if any(d.provenance == "tuned" for d in decisions)
+            else "heuristic")
+
+
+def fused_mlp_tiles(d_model: int, expert_size: int, dtype=jnp.float32,
+                    glu: bool = False) -> Optional[FusedTiles]:
+    """Resolve every tile the fused pipeline will launch (forward AND
+    backward) for one shape class, or None when some kernel has no fitting
+    tile. Reads ``cvmm.VMEM_BUDGET`` at call time (tests monkeypatch it)."""
+    d_pad, g_pad = round_up(d_model, LANE), round_up(expert_size, LANE)
+    b = jnp.dtype(dtype).itemsize
+    budget = cvmm_mod.VMEM_BUDGET
+    nw = 2 if glu else 1
+    w1i = autotune.fused_w1_tiles(d_pad, g_pad, b, nw, 1, budget=budget)
+    w1t = autotune.fused_w1_tiles(d_pad, g_pad, b, nw, 1 + nw, budget=budget)
+    t0 = autotune.fused_w1_tiles(d_pad, g_pad, b, 1, 1, budget=budget)
+    w2 = autotune.decide("pick_tn", {"k_pad": g_pad, "n_pad": d_pad, "b": b},
+                         budget=budget)
+    dw = autotune.streamed_dw_tiles(d_pad, g_pad, b, budget=budget)
+    if any(d.tiles is None for d in (w1i, w1t, t0, w2, dw)):
+        return None
+    return FusedTiles(
+        w1_tn=w1i.tiles["tn"], w1_train_tn=w1t.tiles["tn"],
+        t0_tn=t0.tiles["tn"], w2_tn=w2.tiles["tn"], dw_tb=dw.tiles["tb"],
+        w1_nb=w1i.tiles["n_buffers"], t0_nb=t0.tiles["n_buffers"],
+        dw_nb=dw.tiles["n_buffers"],
+        provenance=_merge_prov(w1i, w1t, t0, w2, dw))
+
+
+def planned_call_tiles(k_dim: int, n_dim: int,
+                       dtype=jnp.float32) -> Optional[PlannedTiles]:
+    """Resolve the four grouped-GEMM tiles one planned unfused call launches
+    (fwd, dX, and the two dW tiles), or None when any has no fitting tile."""
+    k_pad, n_pad = round_up(k_dim, LANE), round_up(n_dim, LANE)
+    b = jnp.dtype(dtype).itemsize
+    budget = cvmm_mod.VMEM_BUDGET
+    picks = [autotune.decide("pick_tn", {"k_pad": kp, "n_pad": npad, "b": b},
+                             budget=budget)
+             for kp, npad in ((k_pad, n_pad), (n_pad, k_pad),
+                              (TM, k_pad), (TM, n_pad))]
+    if any(d.tiles is None for d in picks):
+        return None
+    fwd, dx, dwk, dwn = picks
+    return PlannedTiles(fwd_tn=fwd.tiles["tn"], dx_tn=dx.tiles["tn"],
+                        dw_tk=dwk.tiles["tn"], dw_tn=dwn.tiles["tn"],
+                        provenance=_merge_prov(*picks))
+
+
+class SortKernelPlan(NamedTuple):
+    """The sort path's execution decision for one shape class: which rung of
+    the capability chain runs AND with what tiles — one resolution, consumed
+    by core/dispatch._sort_path. ``rung`` is "pallas_fused", "pallas", or
+    "ragged" (some tile working set cannot fit VMEM at any size, or the
+    activation is not tile-local: degrade to XLA's grouped matmul)."""
+    rung: str
+    fused: Optional[FusedTiles]          # set iff rung == "pallas_fused"
+    planned_w1: Optional[PlannedTiles]   # unfused w1/w1g calls (K=d, N=g)
+    planned_w2: Optional[PlannedTiles]   # unfused w2 call (K=g, N=d)
+
+    @property
+    def provenance(self) -> str:
+        if self.fused is not None:
+            return self.fused.provenance
+        if self.planned_w1 is not None:
+            return _merge_prov(self.planned_w1, self.planned_w2)
+        return "none"
+
+
+def plan_sort_kernels(impl: str, d_model: int, expert_size: int,
+                      activation: str, dtype=jnp.float32,
+                      glu: bool = False) -> SortKernelPlan:
+    """Resolve the sort path's rung and tiles in ONE place.
+
+    Mirrors the old inline gate chain in core/dispatch._sort_path —
+    ``pallas_supported`` decides pallas vs ragged, ``fused_supported`` decides
+    fused vs unfused — but the same tuner queries that answer "does any tile
+    fit" now also return WHICH tile, so degradation decisions and tile
+    choices can never disagree."""
+    if not impl.startswith("pallas"):
+        return SortKernelPlan(rung="ragged", fused=None, planned_w1=None,
+                              planned_w2=None)
+    pw1 = planned_call_tiles(d_model, expert_size, dtype)
+    pw2 = planned_call_tiles(expert_size, d_model, dtype)
+    if pw1 is None or pw2 is None:
+        # matches pallas_supported() is False: even tn=128 exhausts VMEM for
+        # some launch — degrade to XLA's grouped matmul, don't raise at trace.
+        return SortKernelPlan(rung="ragged", fused=None, planned_w1=None,
+                              planned_w2=None)
+    if impl.startswith("pallas_fused") and activation in FUSIBLE_ACTIVATIONS:
+        ft = fused_mlp_tiles(d_model, expert_size, dtype, glu)
+        if ft is not None:
+            return SortKernelPlan(rung="pallas_fused", fused=ft,
+                                  planned_w1=pw1, planned_w2=pw2)
+    return SortKernelPlan(rung="pallas", fused=None, planned_w1=pw1,
+                          planned_w2=pw2)
+
+
+# ---------------------------------------------------------------------------
 # Unfused pallas path with plan-threaded custom_vjp
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
-def _cvmm_planned(x, new_pos, tile_expert, group_sizes, w, interpret):
-    return _planned_fwd(x, new_pos, tile_expert, group_sizes, w, interpret)[0]
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _cvmm_planned(x, new_pos, tile_expert, group_sizes, w, interpret,
+                  tiles=None):
+    return _planned_fwd(x, new_pos, tile_expert, group_sizes, w, interpret,
+                        tiles)[0]
 
 
-def _planned_fwd(x, new_pos, tile_expert, group_sizes, w, interpret):
+def _planned_fwd(x, new_pos, tile_expert, group_sizes, w, interpret,
+                 tiles=None):
     n = w.shape[2]
     m_pad = tile_expert.shape[0] * TM
     x_pad = jnp.zeros((m_pad, round_up(x.shape[1], LANE)), x.dtype)
     x_pad = x_pad.at[new_pos].set(_pad_lane(x, 1))
-    out_pad = cvmm_pallas(x_pad, tile_expert, _pad_w(w), interpret=interpret)
+    out_pad = cvmm_pallas(x_pad, tile_expert, _pad_w(w), interpret=interpret,
+                          tn=None if tiles is None else tiles.fwd_tn)
     # Residuals carry the plan arrays AND the padded activations: backward does
     # zero layout recompute and pads only the incoming cotangent.
     return out_pad[new_pos, :n], (x_pad, new_pos, tile_expert, group_sizes, w)
 
 
-def _planned_bwd(interpret, res, g):
+def _planned_bwd(interpret, tiles, res, g):
     x_pad, new_pos, tile_expert, group_sizes, w = res
     e, k, n = w.shape
     m_pad = x_pad.shape[0]
@@ -419,9 +566,12 @@ def _planned_bwd(interpret, res, g):
     g_pad = g_pad.at[new_pos].set(_pad_lane(g, 1))
     w_pad = _pad_w(w)
     dx_pad = cvmm_pallas(g_pad, tile_expert, jnp.swapaxes(w_pad, 1, 2),
-                         interpret=interpret)
+                         interpret=interpret,
+                         tn=None if tiles is None else tiles.dx_tn)
     dx = dx_pad[new_pos, :k].astype(x_pad.dtype)
-    dw = cvmm_dw_pallas(x_pad, tile_expert, g_pad, e, interpret=interpret)
+    dw = cvmm_dw_pallas(x_pad, tile_expert, g_pad, e, interpret=interpret,
+                        tk=None if tiles is None else tiles.dw_tk,
+                        tn=None if tiles is None else tiles.dw_tn)
     dw = _mask_empty(dw, group_sizes)[:, :k, :n].astype(w.dtype)
     return (dx, _float0(new_pos), _float0(tile_expert), _float0(group_sizes),
             dw)
@@ -431,11 +581,14 @@ _cvmm_planned.defvjp(_planned_fwd, _planned_bwd)
 
 
 def cvmm_planned(x: jax.Array, plan: CvmmPlan, w: jax.Array,
-                 *, interpret: bool) -> jax.Array:
+                 *, interpret: bool,
+                 tiles: Optional[PlannedTiles] = None) -> jax.Array:
     """Grouped matmul on *sorted* rows reusing a precomputed plan (no layout
-    derivation inside — three calls in an MoE layer share one plan)."""
+    derivation inside — three calls in an MoE layer share one plan). ``tiles``
+    threads a pre-resolved tile decision into every launch of this call;
+    omitted -> the kernels fall back to per-launch heuristic queries."""
     return _cvmm_planned(x, plan.new_pos, plan.tile_expert, plan.group_sizes,
-                         w.astype(x.dtype), interpret)
+                         w.astype(x.dtype), interpret, tiles)
 
 
 # ---------------------------------------------------------------------------
@@ -459,13 +612,7 @@ def fused_supported(n_tokens: int, d_model: int, expert_size: int,
     del n_tokens  # streamed: any row count is supported
     if activation not in FUSIBLE_ACTIVATIONS:
         return False
-    n_weights = 2 if glu else 1
-    d_pad, g_pad = round_up(d_model, LANE), round_up(expert_size, LANE)
-    b = jnp.dtype(dtype).itemsize
-    return (fused_w1_tn(d_pad, g_pad, b, n_weights,
-                        n_out=1 + n_weights) is not None
-            and _pick_tn(g_pad, d_pad, b) is not None      # w2 fwd, dX bwd
-            and streamed_dw_tile(d_pad, g_pad, b) is not None)  # dW bwd
+    return fused_mlp_tiles(d_model, expert_size, dtype, glu) is not None
 
 
 def pallas_supported(d_model: int, expert_size: int, dtype=jnp.float32) -> bool:
@@ -476,27 +623,31 @@ def pallas_supported(d_model: int, expert_size: int, dtype=jnp.float32) -> bool:
     the unfused path launches (w1/w2 forward, dX, and the dW outer products)
     must therefore find a fitting tile; when this returns False, dispatchers
     should fall back to the XLA-native "ragged" impl instead of compiling a
-    kernel that raises at trace time (huge d_model / expert_size configs)."""
-    d_pad, g_pad = round_up(d_model, LANE), round_up(expert_size, LANE)
-    b = jnp.dtype(dtype).itemsize
-    return all(_pick_tn(kp, npad, b) is not None
-               for kp, npad in ((d_pad, g_pad), (g_pad, d_pad),
-                                (TM, d_pad), (TM, g_pad)))
+    kernel that raises at trace time (huge d_model / expert_size configs).
+    Same resolution as ``planned_call_tiles`` — the capability answer and the
+    tile choice are one query."""
+    return planned_call_tiles(d_model, expert_size, dtype) is not None
 
 
 def _fused_fwd_impl(static, xf, plan, w1, w1g, w2, save_preact=False):
-    act_name, interpret = static
+    act_name, interpret, tiles = static
     n, d = xf.shape
     # Lane-pad the feature dim only: the streamed kernel gathers rows straight
     # out of HBM, so no row-count padding is needed (sentinel row_src == n).
     xe = _pad_lane(xf, 1)
+    w1_tn = w1_nb = w2_tn = None
+    if tiles is not None:
+        w1_tn = tiles.w1_train_tn if save_preact else tiles.w1_tn
+        w1_nb, w2_tn = tiles.w1_nb, tiles.w2_tn
     w1_out = cvmm_fused_w1_pallas(
         xe, plan.row_src, plan.run_start, plan.run_off, plan.tile_expert,
         _pad_w(w1), _pad_w(w1g) if w1g is not None else None,
-        act_name=act_name, save_preact=save_preact, interpret=interpret)
+        act_name=act_name, save_preact=save_preact, interpret=interpret,
+        tn=w1_tn, n_buffers=w1_nb)
     u_pad = w1_out[0] if save_preact else w1_out
     y_pad = cvmm_fused_w2_pallas(u_pad, plan.tile_expert, _pad_w(w2),
-                                 plan.gate_tiles, interpret=interpret)
+                                 plan.gate_tiles, interpret=interpret,
+                                 tn=w2_tn)
     # row_src slack slots hold the sentinel n — out of bounds, dropped here.
     y = jnp.zeros((n, d), y_pad.dtype).at[plan.row_src].add(
         y_pad[:, :d], mode="drop")
@@ -519,8 +670,13 @@ def _fused_fwd(static, xf, plan, w1, w1g, w2):
 
 
 def _fused_bwd(static, res, dy):
-    act_name, interpret = static
+    act_name, interpret, tiles = static
     xe, plan, w1, w1g, w2, preact, (n, d) = res
+    t0_tn = t0_nb = dx_tn = dw_tb = dw_nb = None
+    if tiles is not None:
+        t0_tn, t0_nb = tiles.t0_tn, tiles.t0_nb
+        dx_tn = tiles.w2_tn              # dX shares the (g_pad, d_pad) key
+        dw_tb, dw_nb = tiles.dw_tb, tiles.dw_nb
     act = act_fn(act_name)
     e, _, gsz = w1.shape
     w1p, w2p = _pad_w(w1), _pad_w(w2)
@@ -536,7 +692,8 @@ def _fused_bwd(static, res, dy):
     # t0 = gather(dy) @ w2^T: the streamed fused kernel with an identity
     # epilogue (slack rows zero-fill -> t0 slack rows are exactly zero).
     t0 = cvmm_fused_w1_pallas(dy_e, *runs, jnp.swapaxes(w2p, 1, 2), None,
-                              act_name="identity", interpret=interpret)
+                              act_name="identity", interpret=interpret,
+                              tn=t0_tn, n_buffers=t0_nb)
     if w1g is not None:
         h, hg = preact
         u, eltwise_vjp = jax.vjp(lambda a, b: act(a) * b, h, hg)
@@ -557,22 +714,25 @@ def _fused_bwd(static, res, dy):
     dw2 = _mask_empty(
         cvmm_dw_streamed_pallas(u, dy_e, *runs, e, stream_x=False,
                                 gate_tiles=plan.gate_tiles,
-                                interpret=interpret),
+                                interpret=interpret, tb=dw_tb,
+                                n_buffers=dw_nb),
         plan.group_sizes)[:, :gsz, :d].astype(w2.dtype)
     dw1 = _mask_empty(
         cvmm_dw_streamed_pallas(xe, dh, *runs, e, stream_x=True,
-                                interpret=interpret),
+                                interpret=interpret, tb=dw_tb,
+                                n_buffers=dw_nb),
         plan.group_sizes)[:, :d, :gsz].astype(w1.dtype)
     dx_pad = cvmm_pallas(dh, plan.tile_expert, jnp.swapaxes(w1p, 1, 2),
-                         interpret=interpret)
+                         interpret=interpret, tn=dx_tn)
     if w1g is not None:
         dw1g = _mask_empty(
             cvmm_dw_streamed_pallas(xe, dhg, *runs, e, stream_x=True,
-                                    interpret=interpret),
+                                    interpret=interpret, tb=dw_tb,
+                                    n_buffers=dw_nb),
             plan.group_sizes)[:, :d, :gsz].astype(w1g.dtype)
         dx_pad = dx_pad + cvmm_pallas(dhg, plan.tile_expert,
                                       jnp.swapaxes(w1gp, 1, 2),
-                                      interpret=interpret)
+                                      interpret=interpret, tn=dx_tn)
     else:
         dw1g = None
 
@@ -592,19 +752,29 @@ _moe_mlp_fused.defvjp(_fused_fwd, _fused_bwd)
 
 def moe_mlp_fused(xf: jax.Array, plan: CvmmPlan, w1: jax.Array, w2: jax.Array,
                   w1g: Optional[jax.Array] = None, *, activation: str = "relu",
-                  interpret: Optional[bool] = None) -> jax.Array:
+                  interpret: Optional[bool] = None,
+                  tiles: Optional[FusedTiles] = None) -> jax.Array:
     """Fused dropless expert MLP: y[t] = gate * (act(x @ w1[e]) [* x @ w1g[e]]) @ w2[e].
 
     xf (N, d) UNSORTED activations; the gather, activation/GLU and gate multiply
     all run inside the two kernel launches (see kernels/cvmm.py). Returns the
-    per-(token, expert) outputs already scatter-added back to (N, d)."""
+    per-(token, expert) outputs already scatter-added back to (N, d).
+
+    ``tiles`` threads one pre-resolved ``FusedTiles`` decision (dispatch /
+    ``fused_mlp_tiles``) through every launch of this call, forward and
+    backward; omitted -> resolved here once per trace (identical answer when
+    tuning is disabled)."""
     if activation not in FUSIBLE_ACTIVATIONS:
         raise ValueError(f"activation {activation!r} is not tile-local; "
                          f"fusible: {FUSIBLE_ACTIVATIONS}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     dt = xf.dtype
-    return _moe_mlp_fused((activation, interpret), xf, plan, w1.astype(dt),
+    if tiles is None:
+        tiles = fused_mlp_tiles(w1.shape[1], w1.shape[2], dt,
+                                glu=w1g is not None)
+    return _moe_mlp_fused((activation, interpret, tiles), xf, plan,
+                          w1.astype(dt),
                           None if w1g is None else w1g.astype(dt),
                           w2.astype(dt))
 
@@ -629,5 +799,7 @@ def cvmm(x: jax.Array, group_sizes: jax.Array, w: jax.Array,
                                                w.shape[0])
         return _cvmm_planned(x, new_pos, tile_expert,
                              group_sizes.astype(jnp.int32), w.astype(x.dtype),
-                             _impl_interpret(impl))
+                             _impl_interpret(impl),
+                             planned_call_tiles(x.shape[1], w.shape[2],
+                                                x.dtype))
     raise ValueError(f"unknown cvmm impl {impl}")

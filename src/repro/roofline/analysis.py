@@ -26,10 +26,34 @@ class Hardware:
     hbm_bw: float                # B/s per chip
     ici_bw: float                # B/s per link per chip
     hbm_bytes: float             # capacity per chip
+    # Fast on-chip tile memory per core (VMEM on TPU). The kernel autotuner
+    # (kernels/autotune.py) slices its per-kernel working-set budget from this
+    # instead of hard-coding bytes; off-TPU models mirror the TPU value so
+    # interpret-mode tile choices match the TPU defaults bit-for-bit.
+    vmem_bytes: float = 16 * 2**20
 
 
 V5E = Hardware(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
                hbm_bytes=16e9)
+
+# Interpret-mode stand-in for CPU CI runs: throughput numbers only order the
+# autotuner's roofline pruning (relative cost), they are not calibrated.
+CPU_INTERPRET = Hardware(name="cpu_interpret", peak_flops=2e11, hbm_bw=4e10,
+                         ici_bw=1e9, hbm_bytes=32e9)
+
+# Coarse A100-class placeholder so gpu backends get a sane pruning model.
+GPU_GENERIC = Hardware(name="gpu_generic", peak_flops=312e12, hbm_bw=2.0e12,
+                       ici_bw=300e9, hbm_bytes=80e9)
+
+# jax.default_backend() name -> hardware model (kernels/autotune.py resolves
+# the backend; this module stays importable without jax).
+HARDWARE_MODELS = {"tpu": V5E, "cpu": CPU_INTERPRET, "gpu": GPU_GENERIC}
+
+
+def hardware_for(backend: str) -> Hardware:
+    """Hardware model for a jax backend name (unknown backends fall back to
+    the TPU model — conservative VMEM, TPU-shaped roofline)."""
+    return HARDWARE_MODELS.get(backend, V5E)
 
 
 @dataclasses.dataclass

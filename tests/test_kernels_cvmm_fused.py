@@ -504,3 +504,73 @@ def test_moe_dispatch_consistent_with_gate(monkeypatch, activation,
     assert called["fused"] == (1 if expect_fused else 0)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Deeper stream pipelines (PR 6): the autotuner may pick n_buffers > 2; every
+# streamed kernel must stay bit-compatible with the depth-2 default.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_buffers", [3, 4])
+def test_gather_rows_deeper_pipeline_matches_take(n_buffers):
+    n, d, e, k = 45, 24, 4, 2
+    case = (n, d, e, 16, k, e)
+    xf, idx, gates, *_ = _mk(case, jnp.float32)
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    xe = ops._pad_lane(xf, 1)
+    got = cvmm.cvmm_gather_rows_pallas(xe, plan.row_src, plan.run_start,
+                                       plan.run_off, interpret=True,
+                                       n_buffers=n_buffers)
+    want = jnp.take(xe, plan.row_src, axis=0, mode="fill", fill_value=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_dw_streamed_depth3_matches_depth2():
+    case = (52, 24, 4, 16, 2, 4)
+    n, d, e, g, k, _ = case
+    xf, idx, gates, _, _, _ = _mk(case, jnp.float32)
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    xe = ops._pad_lane(xf, 1)
+    g_pad = ops.round_up(g, ops.LANE)
+    gg = jax.random.normal(jax.random.PRNGKey(7), (plan.m_pad, g_pad),
+                           jnp.float32)
+    runs = (plan.row_src, plan.run_start, plan.run_off, plan.tile_expert)
+    d2 = cvmm.cvmm_dw_streamed_pallas(xe, gg, *runs, e, stream_x=True,
+                                      interpret=True)
+    d3 = cvmm.cvmm_dw_streamed_pallas(xe, gg, *runs, e, stream_x=True,
+                                      interpret=True, n_buffers=3)
+    np.testing.assert_allclose(np.asarray(d3), np.asarray(d2))
+
+
+@pytest.mark.parametrize("glu", [False, True])
+def test_fused_mlp_depth3_tiles_match_ragged(glu):
+    """moe_mlp_fused with an explicit depth-3 FusedTiles plan (as a tuned
+    cache would supply) matches the ragged oracle forward AND backward —
+    including the 1-token-tile warmup guard on small grids."""
+    case = (40, 24, 5, 16, 2, 5)
+    n, d, e, g, k, _ = case
+    xf, idx, gates, w1, w1g, w2 = _mk(case, jnp.float32)
+    if not glu:
+        w1g = None
+    base = ops.fused_mlp_tiles(d, g, xf.dtype, glu=glu)
+    tiles = base._replace(w1_nb=3, t0_nb=3, dw_nb=3)
+
+    def loss_fused(xf, gates, w1, w1g, w2):
+        plan = ops.make_moe_plan(idx, gates, n, e)
+        return ops.moe_mlp_fused(xf, plan, w1, w2, w1g, activation="relu",
+                                 interpret=True, tiles=tiles).sum()
+
+    def loss_ref(xf, gates, w1, w1g, w2):
+        return _oracle_mlp(xf, idx, gates, w1, w1g, w2, e, jax.nn.relu).sum()
+
+    y = ops.moe_mlp_fused(xf, ops.make_moe_plan(idx, gates, n, e), w1, w2,
+                          w1g, activation="relu", interpret=True, tiles=tiles)
+    want = _oracle_mlp(xf, idx, gates, w1, w1g, w2, e, jax.nn.relu)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    argnums = (0, 1, 2, 3, 4) if glu else (0, 1, 2, 4)
+    gf = jax.grad(loss_fused, argnums=argnums)(xf, gates, w1, w1g, w2)
+    gr = jax.grad(loss_ref, argnums=argnums)(xf, gates, w1, w1g, w2)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
