@@ -36,6 +36,16 @@ Three configs are measured:
            TRIPWIRE semantics (like the ``bwd`` gate): on CPU the serialized
            DMA pipeline loses to XLA's fused gather, so the thresholds only
            trip on real regressions of the planned path.
+  pkm_large  PKM aggregation at a scale where coalescing matters (PR 7):
+           >= 64k values (n_subkeys=256), a realistic token batch, and a
+           duplicate-heavy hot-set routing (90% of selections land on 1k hot
+           values — the regime usage-skewed PKM training produces). Measures
+           the DEDUP plan (``ops.make_dedup_gather_plan`` + the compacted
+           streamed gather, the production ``weighted_value_sum`` lowering)
+           vs the dense reference, and records its ``dma_descriptors``:
+           ``batching_factor`` here is the CI-GATED coalescing signal
+           (>= 4.0) — the dedup/sorted plan must beat one-DMA-per-selection
+           by 4x where the old flat plan flat-lined at 1.003.
 
 On CPU the pallas kernels run in interpret mode, so absolute numbers are not
 TPU numbers; the comparison fused-vs-unfused and the bytes model are the
@@ -171,6 +181,88 @@ def _bench_pkm(cfg: PkmBenchConfig, iters: int) -> dict:
     return {"config": cfg._asdict(), "results": results,
             "pkm_speedup_vs_dense": speedup,
             "tiles": _gather_tile_report(cfg.d_model),
+            "dma_descriptors": ops.plan_dma_stats(plan, cfg.n_values)}
+
+
+class PkmLargeBenchConfig(NamedTuple):
+    n_tokens: int
+    d_model: int
+    n_subkeys: int     # n_values = n_subkeys**2 (the config single-source)
+    heads: int
+    knn: int
+    hot_values: int    # size of the co-selected hot set
+    hot_frac: float    # fraction of selections landing on the hot set
+
+    @property
+    def n_values(self) -> int:
+        return self.n_subkeys * self.n_subkeys
+
+
+# Coalescing-scale PKM aggregation (PR 7): 65536 values, 256 tokens each
+# selecting H*K = 64 rows (16384 selections), 90% of them on a 1024-row hot
+# set. Dedup collapses the hot mass to <= 1024 DMA slots, so the plan issues
+# ~2.6k descriptors for 16.4k selections — the gateable >= 4x batching win
+# the flat per-selection plan could never show (1.003 at the pkm config).
+PKM_LARGE = PkmLargeBenchConfig(n_tokens=256, d_model=128, n_subkeys=256,
+                                heads=4, knn=16, hot_values=1024,
+                                hot_frac=0.9)
+
+
+def _pkm_large_setup(cfg: PkmLargeBenchConfig, dtype=jnp.float32):
+    key = jax.random.PRNGKey(0)
+    kh, kp, ks, kc, kw, kv = jax.random.split(key, 6)
+    s = cfg.heads * cfg.knn
+    shape = (cfg.n_tokens, s)
+    hot = jax.random.choice(kh, cfg.n_values, (cfg.hot_values,),
+                            replace=False)
+    hot_idx = hot[jax.random.randint(ks, shape, 0, cfg.hot_values)]
+    cold_idx = jax.random.randint(kc, shape, 0, cfg.n_values)
+    idx = jnp.where(jax.random.uniform(kp, shape) < cfg.hot_frac,
+                    hot_idx, cold_idx).astype(jnp.int32)
+    w = jax.nn.relu(jax.random.normal(kw, shape, jnp.float32))
+    values = (0.3 * jax.random.normal(
+        kv, (cfg.n_values, cfg.d_model))).astype(dtype)
+    return values, idx, w
+
+
+def _pkm_large_agg(impl: str, cfg: PkmLargeBenchConfig):
+    """Dense reference vs the dedup/sorted plan (the production
+    weighted_value_sum lowering: compacted streamed gather + scatter-side
+    weight indirection), plan built per call as in production."""
+    def f(values, idx, w):
+        if impl == "dense":
+            return jnp.einsum("ns,nsd->nd", w.astype(values.dtype),
+                              values[idx])
+        plan = ops.make_dedup_gather_plan(idx, w, cfg.n_values)
+        return ops.gathered_weighted_sum_dedup(values, plan, cfg.n_tokens)
+    return f
+
+
+def _dedup_gather_tile_report(d_model: int, itemsize: int = 4) -> dict:
+    dec = autotune.dedup_gather_tiles(round_up(d_model, LANE), itemsize,
+                                      budget=cvmm.VMEM_BUDGET)
+    return {"gather": dec.tiles, "provenance": dec.provenance}
+
+
+def _bench_pkm_large(cfg: PkmLargeBenchConfig, iters: int) -> dict:
+    args = _pkm_large_setup(cfg)
+    results = {}
+    for impl in ("dense", "dedup"):
+        f = _pkm_large_agg(impl, cfg)
+        entry = {"fwd_us": round(_time(jax.jit(f), args, iters), 1)}
+        probe = lambda v, i, w: f(v, i, w).astype(jnp.float32).sum()
+        grad = jax.jit(jax.grad(probe, argnums=(0, 2)))
+        entry["fwd_bwd_us"] = round(_time(grad, args, iters), 1)
+        results[impl] = entry
+    speedup = {
+        k: round(results["dense"][f"{k}_us"]
+                 / max(results["dedup"][f"{k}_us"], 1e-9), 3)
+        for k in ("fwd", "fwd_bwd")}
+    plan = ops.make_dedup_gather_plan(args[1], args[2], cfg.n_values)
+    return {"config": {**cfg._asdict(), "n_values": cfg.n_values},
+            "results": results,
+            "pkm_speedup_vs_dense": speedup,
+            "tiles": _dedup_gather_tile_report(cfg.d_model),
             "dma_descriptors": ops.plan_dma_stats(plan, cfg.n_values)}
 
 
@@ -352,6 +444,10 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
     # path that started doing dense-path work on top of the kernels would
     # crater the ratio), not a speedup claim.
     pkm = _bench_pkm(PKM, max(iters, 10))
+    # Coalescing-scale PKM aggregation (PR 7): the gated signal here is the
+    # dedup plan's batching_factor (>= 4.0), a pure plan property — stable
+    # regardless of host load — so few iters suffice for the timings.
+    pkm_large = _bench_pkm_large(PKM_LARGE, min(iters, 2))
     payload = {
         "config": {**base["config"], "iters": iters,
                    "backend": jax.default_backend(),
@@ -366,6 +462,13 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
                 "note": "value aggregation via GatherPlan + streamed gather "
                         "kernels vs the dense (N, S, d) take+einsum; "
                         "interpret-mode ratios are tripwires, see above"},
+        "pkm_large": {**pkm_large,
+                      "note": "65536-value duplicate-heavy aggregation via "
+                              "the dedup/sorted plan (compacted streamed "
+                              "gather + scatter-side weight indirection); "
+                              "dma_descriptors.batching_factor is the "
+                              "CI-gated coalescing signal (>= 4.0), timings "
+                              "are interpret-mode tripwires"},
         "large_n": {**large,
                     "note": "token count past the retired whole-x VMEM "
                             "boundary; streamed row-DMA gather territory"},
@@ -385,6 +488,15 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
     rows += [f"cvmm/pkm_agg/{impl}_fwd,{r['fwd_us']},"
              f"fwd_bwd_us={r['fwd_bwd_us']}"
              for impl, r in pkm["results"].items()]
+    rows += [f"cvmm/pkm_large/{impl}_fwd,{r['fwd_us']},"
+             f"fwd_bwd_us={r['fwd_bwd_us']}"
+             for impl, r in pkm_large["results"].items()]
+    dd = pkm_large["dma_descriptors"]
+    rows.append(
+        f"cvmm/pkm_large/dma,{dd['run_batched']},"
+        f"batching_factor={dd['batching_factor']};"
+        f"per_row={dd['per_row']};unique_rows={dd['unique_rows']};"
+        f"speedup_vs_dense={pkm_large['pkm_speedup_vs_dense']['fwd']}x")
     rows.append(
         f"# wrote {out_path}; fused/unfused speedups fwd+bwd "
         f"{payload['fused_speedup_vs_pallas']['fwd_bwd']}x / bwd-only "
@@ -395,7 +507,9 @@ def run(out_path: str = "BENCH_cvmm.json", iters: int = ITERS):
         f"{large['fused_speedup_vs_pallas']['fwd']}x; pkm-agg vs dense "
         f"{payload['pkm_speedup_vs_dense']['fwd']}x fwd / "
         f"{payload['pkm_speedup_vs_dense']['fwd_bwd']}x fwd+bwd "
-        f"(interpret-mode tripwire)")
+        f"(interpret-mode tripwire); pkm-large "
+        f"({PKM_LARGE.n_values} values) dedup batching "
+        f"{dd['batching_factor']}x over {dd['run_batched']} descriptors")
     tune = payload["tune"]
     fused = payload["tiles"]["fused"] or {}
     rows.append(

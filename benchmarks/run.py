@@ -1,5 +1,8 @@
 """Benchmark aggregator -- one module per paper table/figure, plus the CVMM
-hot-path micro-benchmark (bench_cvmm -> BENCH_cvmm.json).
+hot-path micro-benchmark (bench_cvmm -> BENCH_cvmm.json). The cvmm module's
+``pkm_large`` section (64k+ value PKM aggregation through the deduplicated
+coalescing gather) rides the --quick subset and carries the CI-gated
+``dma_descriptors.batching_factor`` coalescing signal.
 
     PYTHONPATH=src python -m benchmarks.run [--steps N] [--only tableX]
     PYTHONPATH=src python -m benchmarks.run --quick    # smoke: cvmm + fig2

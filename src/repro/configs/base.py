@@ -75,6 +75,8 @@ class FFNConfig:
     pkm_heads: int = 4
     pkm_knn: int = 32                  # K per head
     n_subkeys: int = 0                 # sqrt(d_ff); n_values = n_subkeys**2
+    n_candidates: int = 0              # C: two-stage top-C per sub-key half
+    #                                    (0 => C = pkm_knn, the minimum legal C)
 
     @property
     def n_values(self) -> int:
@@ -83,6 +85,14 @@ class FFNConfig:
         same quantity — a stale d_ff cannot silently mis-scale the paper's
         dense-equivalent value init (validated below)."""
         return self.n_subkeys * self.n_subkeys
+
+    @property
+    def pkm_candidates(self) -> int:
+        """Effective two-stage candidate width C: top-C per sub-key half, the
+        C*C candidate grid is re-scored to the final top-K. The true top-K of
+        the full n_subkeys**2 grid is provably contained in the grid iff
+        C >= K, so C defaults to pkm_knn when n_candidates is unset."""
+        return self.n_candidates or self.pkm_knn
 
     def validate(self) -> None:
         assert self.kind in FFN_KINDS, self.kind
@@ -95,6 +105,22 @@ class FFNConfig:
             # derived value count — PKM's d_ff IS n_subkeys**2 (paper Sec 3.2).
             assert self.d_ff in (0, self.n_values), \
                 f"pkm d_ff={self.d_ff} != n_subkeys**2={self.n_values}"
+            # Two-stage candidate width: top-K over the C*C candidate grid
+            # only provably equals the full top-K when each half contributes
+            # at least K candidates (containment needs C >= K), and a C wider
+            # than n_subkeys is impossible (each half only has n_subkeys
+            # scores to take top-C from). Unset (0) means C = pkm_knn, the
+            # minimum legal width, so only an explicit value needs checking.
+            if self.n_candidates:
+                assert self.n_candidates >= self.pkm_knn, (
+                    f"pkm n_candidates={self.n_candidates} < pkm_knn="
+                    f"{self.pkm_knn}: the two-stage C*C candidate grid can "
+                    f"only contain the true top-K when C >= K (set "
+                    f"n_candidates >= pkm_knn, or 0 for C=K)")
+                assert self.n_candidates <= self.n_subkeys, (
+                    f"pkm n_candidates={self.n_candidates} > n_subkeys="
+                    f"{self.n_subkeys}: each half only has n_subkeys scores "
+                    f"to take top-C from")
         if self.kind in ("dense", "glu", "topk"):
             assert self.d_ff > 0
 

@@ -36,9 +36,13 @@ Kernel lowering — ONE capability chain instead of one per approximator
   all_to_all expert parallelism) — moved verbatim from core/moe.py.
 
 ``weighted_value_sum`` (PKM aggregation, top-K sparse down-projection)
-    pallas_fused   ops.gathered_weighted_sum, weight multiply fused into the
-                   streamed gather kernel's epilogue
-    pallas         same streamed gather, weight multiply as an XLA pass
+    pallas_fused,  ops.gathered_weighted_sum_dedup: the batch's selection
+    pallas         union is deduplicated + value-index-sorted into ONE
+                   DedupGatherPlan, the compacted block streams HBM->VMEM
+                   once (co-selected rows = one DMA, adjacent indices =
+                   multi-row descriptors), per-token weights apply via the
+                   scatter-side indirection (both rungs lower identically;
+                   the names are kept for value_sum_path reporting)
     einsum         XLA take + einsum (materializes the (N, S, d) gather —
                    the reference semantics, kept as the last rung)
 
@@ -139,17 +143,22 @@ def weighted_value_sum(values: jax.Array, sel: Selection, n_tokens: int,
 
     The shared aggregation primitive: capability chain pallas_fused ->
     pallas -> einsum (see module docstring), resolved by ``value_sum_path``.
-    The planned rungs build ONE GatherPlan per call and stream the value rows
-    HBM->VMEM through the run-batched row-DMA pipeline — no (N, S, d) gather
-    is materialized. ("dense" is handled by the approximators' own oracle
-    references before calling here; it degrades to the einsum rung, which
-    computes the identical quantity.)"""
+    The planned rungs build ONE DedupGatherPlan per call — the deduplicated,
+    value-index-sorted union of the batch's selections — and stream the
+    compacted row block HBM->VMEM once through the run-batched row-DMA
+    pipeline (co-selected rows are one DMA, adjacent value indices pack into
+    multi-row descriptors); per-token weights apply through the plan's
+    scatter-side indirection. No (N, S, d) gather is materialized. ("dense"
+    is handled by the approximators' own oracle references before calling
+    here; it degrades to the einsum rung, which computes the identical
+    quantity.)"""
     from ..kernels import ops as kops
     path = value_sum_path(cfg, values.shape[-1], values.dtype)
     if path in ("pallas_fused", "pallas"):
-        plan = kops.make_gather_plan(sel.idx, sel.weights, values.shape[0])
-        return kops.gathered_weighted_sum(
-            values, plan, n_tokens, fuse_weights=(path == "pallas_fused"),
+        plan = kops.make_dedup_gather_plan(sel.idx, sel.weights,
+                                           values.shape[0])
+        return kops.gathered_weighted_sum_dedup(
+            values, plan, n_tokens,
             interpret=True if resolve_impl(cfg).endswith("_interpret")
             else None)
     rows = dense_value_gather(values, sel.idx)

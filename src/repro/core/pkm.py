@@ -10,18 +10,27 @@ Modifications made by the paper (which we follow):
 
 Framework lowering (paper Sec. 2 / core/dispatch.py): under the unified view a
 PKM *is* an expert_size-1 MoE — the PEER heads of "Mixture of A Million
-Experts" are exactly this. Retrieval (``pkm_select``: the product-key
-Cartesian top-K) produces a ``dispatch.Selection`` over the ns^2 value rows
-(vidx -> row ids, w -> weights), and aggregation executes through the shared
-planned layer (``dispatch.weighted_value_sum``): the value table stays in HBM
-and the selected rows stream through the run-batched row-DMA gather kernels.
-The dense (N, H, K, d_model) value take + einsum survives only as the
+Experts" are exactly this. Retrieval (``pkm_select``) is the TWO-STAGE
+product-key selection (``routing.two_stage_topk``): top-C per sub-key half,
+the C*C candidate grid re-scored to the final top-K, so the full
+(n_tokens, ns^2) score matrix never materializes and ``n_values = ns**2``
+scales to 1M+ (ns=1024) at O(ns + C^2) per-token selection cost. C is
+``cfg.pkm_candidates`` (``n_candidates`` knob, default K — the minimum width
+for which the candidate grid provably contains the true top-K). The result
+is a ``dispatch.Selection`` over the ns^2 value rows (vidx -> row ids,
+w -> weights), and aggregation executes through the shared planned layer
+(``dispatch.weighted_value_sum``): the value table stays in HBM, the
+batch-wide selection union is deduplicated and value-index-sorted into an
+``ops.DedupGatherPlan``, the compacted block streams HBM->VMEM once through
+the run-batched row-DMA gather kernel, and a scatter-side indirection
+(compacted slot -> (token, slot) weight) applies per-token weights. The
+dense (N, H, K, d_model) value take + einsum survives only as the
 ``impl="dense"`` oracle reference (``_aggregate_dense``) and the einsum
 fallback rung of the chain.
 
-Key property (tested): applying top-K to u_a and u_b before the Cartesian combine
-yields K^2 candidates that PROVABLY contain the true top-K of the full
-u[i] = u_a[i mod sqrt(dff)] + u_b[i // sqrt(dff)].
+Key property (tested): applying top-C (C >= K) to u_a and u_b before the
+Cartesian combine yields C^2 candidates that PROVABLY contain the true top-K
+of the full u[i] = u_a[i mod sqrt(dff)] + u_b[i // sqrt(dff)].
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ import jax.numpy as jnp
 
 from ..configs.base import FFNConfig
 from . import init as initlib
+from . import routing
 from .dispatch import (Selection, base_aux, resolve_impl, selection_usage,
                        weighted_value_sum)
 
@@ -68,16 +78,11 @@ def pkm_select(params: Dict, xf: jax.Array, cfg: FFNConfig) -> Selection:
     ua = jnp.einsum("nd,hds->nhs", xa, params["keys_a"].astype(xf.dtype))  # (N, H, ns)
     ub = jnp.einsum("nd,hds->nhs", xb, params["keys_b"].astype(xf.dtype))
 
-    va, ia = jax.lax.top_k(ua, knn)                          # (N, H, K)
-    vb, ib = jax.lax.top_k(ub, knn)
-
-    # Cartesian combine (Eq. 8): scores s[i,j] = ua[i] + ub[j]; the true top-K of the
-    # full u is guaranteed to be within these K^2 candidates.
-    cand = va[..., :, None] + vb[..., None, :]               # (N, H, K, K)
-    cand = cand.reshape(*cand.shape[:-2], knn * knn)
-    top, flat = jax.lax.top_k(cand, knn)                     # (N, H, K)
-    sel_a = jnp.take_along_axis(ia, flat // knn, axis=-1)    # index into u_a
-    sel_b = jnp.take_along_axis(ib, flat % knn, axis=-1)
+    # Two-stage product-key selection (Eq. 8): top-C per half, re-score the
+    # C*C candidate grid to the final top-K. Exact for C >= K (validated in
+    # FFNConfig), and the full (N, ns^2) score matrix never exists — ns=1024
+    # (n_values > 1M) costs the same per-token top-C as ns=8.
+    top, sel_a, sel_b = routing.two_stage_topk(ua, ub, knn, cfg.pkm_candidates)
     # full index: i = i_b * ns + i_a  (u[i] = u_b[i // ns] + u_a[i mod ns], Eq. 8)
     vidx = sel_b * ns + sel_a                                # (N, H, K)
 

@@ -32,6 +32,35 @@ def norm_topk(s: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     return gates, idx
 
 
+def two_stage_topk(ua: jax.Array, ub: jax.Array, k: int,
+                   n_candidates: int = 0
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Two-stage product-key top-K (paper Sec. 3.2 / Lample et al. 2019).
+
+    The full score grid is u[i] = ub[i // ns] + ua[i mod ns] over
+    n_values = ns**2 entries; this never materializes it. Stage 1 takes the
+    top-C of each half independently; stage 2 re-scores only the C*C
+    candidate grid and takes the final top-K. For C >= K the true top-K of
+    the full grid is provably contained in the candidate grid (each of the
+    true top-K has both halves in their respective top-K <= top-C), so the
+    result is exact while the work is O(ns + C^2) per token instead of
+    O(ns^2) — `n_values` can reach 1M+ (ns=1024) without a
+    (n_tokens, n_values) score matrix ever existing.
+
+    ua, ub: (..., ns) sub-key score halves. Returns ``(scores, sel_a, sel_b)``
+    each (..., K), where the flat value index is ``sel_b * ns + sel_a``.
+    """
+    c = n_candidates or k
+    va, ia = jax.lax.top_k(ua, c)
+    vb, ib = jax.lax.top_k(ub, c)
+    cand = va[..., :, None] + vb[..., None, :]            # (..., C, C)
+    cand = cand.reshape(*cand.shape[:-2], c * c)
+    top, flat = jax.lax.top_k(cand, k)                    # over C*C, not ns*ns
+    sel_a = jnp.take_along_axis(ia, flat // c, axis=-1)
+    sel_b = jnp.take_along_axis(ib, flat % c, axis=-1)
+    return top, sel_a, sel_b
+
+
 def sinkhorn(logits: jax.Array, n_iters: int = 8) -> jax.Array:
     """Log-space Sinkhorn normalization (Clark et al. 2022 S-BASE routing).
 

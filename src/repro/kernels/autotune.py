@@ -292,6 +292,20 @@ def _cost_gather(dims, tiles, hw):
     return bytes_moved / hw.hbm_bw + overhead
 
 
+def _cost_gather_dedup(dims, tiles, hw):
+    """Same streamed gather kernel at the dedup plan's SORTED routing: the
+    sorted-unique row space packs ~TM/32-descriptor tiles (blocks of adjacent
+    value indices) instead of the mixed plan's ~TM/2, so the per-step
+    descriptor overhead — the term the pipeline depth amortizes — is ~1/4 of
+    the mixed family's. Byte traffic is identical; the distinct cost shape is
+    what makes this a separate cache shape-class."""
+    k_pad, b = dims["k_pad"], dims["b"]
+    m = M_REF_TILES
+    bytes_moved = 2 * m * TM * k_pad * b
+    overhead = m * (STEP_OVERHEAD_S / 4) * (2.0 / tiles.get("n_buffers", 2))
+    return bytes_moved / hw.hbm_bw + overhead
+
+
 # ---------------------------------------------------------------------------
 # Micro-benchmarks (lazy kernel imports; only run when tuning is enabled)
 # ---------------------------------------------------------------------------
@@ -396,6 +410,37 @@ def _bench_gather(dims, tiles) -> float:
     return _time_us(lambda: f(x, row_src, run_start, run_off))
 
 
+def _sorted_plan(m_pad: int):
+    """Reference gather routing at run_class "sorted": ascending row ids in
+    32-row blocks separated by gaps — the dedup plan's characteristic layout
+    (sorted-unique value indices: dense stretches of co-selected hot rows
+    with cold-row gaps between them). Every tile packs into size-32 chunks,
+    exercising the large-class end the mixed plan only half-covers. Sources
+    span 2*m_pad rows so the gapped pattern stays in bounds."""
+    import jax.numpy as jnp
+    import numpy as np
+    from . import ops
+    j = np.arange(m_pad)
+    src = (j // 32) * 64 + (j % 32)
+    row_src = jnp.asarray(src.astype(np.int32))
+    run_start, _, run_off = ops._plan_runs(row_src, 2 * m_pad)
+    return row_src, run_start, run_off
+
+
+def _bench_gather_dedup(dims, tiles) -> float:
+    import jax
+    import jax.numpy as jnp
+    from . import cvmm
+    dt = _bench_dtype(dims["b"])
+    m_pad = M_REF_TILES * TM
+    row_src, run_start, run_off = _sorted_plan(m_pad)
+    x = jnp.ones((2 * m_pad, dims["k_pad"]), dt)
+    f = jax.jit(functools.partial(cvmm.cvmm_gather_rows_pallas,
+                                  interpret=_interpret(),
+                                  n_buffers=tiles["n_buffers"]))
+    return _time_us(lambda: f(x, row_src, run_start, run_off))
+
+
 class _Family(NamedTuple):
     candidates: Callable
     cost: Callable
@@ -410,6 +455,11 @@ _FAMILIES: Dict[str, _Family] = {
     "streamed_dw": _Family(_cand_streamed_dw, _cost_streamed_dw,
                            _bench_streamed_dw, "mixed"),
     "gather": _Family(_cand_gather, _cost_gather, _bench_gather, "mixed"),
+    # Same kernel + candidate set as "gather", but measured/modeled at the
+    # dedup plan's sorted-unique routing — a separate shape-class so tuned
+    # winners for mixed vs sorted contiguity never overwrite each other.
+    "gather_dedup": _Family(_cand_gather, _cost_gather_dedup,
+                            _bench_gather_dedup, "sorted"),
 }
 
 
@@ -567,6 +617,15 @@ def streamed_dw_tiles(stream_w: int, block_w: int, bytes_per_el: int, *,
 def gather_tiles(k_pad: int, bytes_per_el: int, *,
                  budget: Optional[int] = None) -> TileDecision:
     return decide("gather", {"k_pad": k_pad, "b": bytes_per_el},
+                  budget=budget)
+
+
+def dedup_gather_tiles(k_pad: int, bytes_per_el: int, *,
+                       budget: Optional[int] = None) -> TileDecision:
+    """Pipeline depth for the dedup/sorted gather (ops.DedupGatherPlan):
+    same kernel and candidates as ``gather_tiles``, separate shape-class —
+    the sorted routing's larger chunks shift where extra depth pays."""
+    return decide("gather_dedup", {"k_pad": k_pad, "b": bytes_per_el},
                   budget=budget)
 
 

@@ -71,9 +71,19 @@ Fused/streamed pipeline (one HBM round-trip per matmul, nothing else)
       -> tile-aligned (M_pad, K) layout, zeros on slack. No longer on the
       MoE training path (backward streams instead), but — with the optional
       ``weight_tiles`` epilogue (per-row multiply in VMEM) — it is the
-      execution kernel of the framework's weighted value aggregation
-      (ops.gathered_weighted_sum): PKM value lookup and the top-K MLP's
-      sparse down-projection gather their selected rows through it, so the
+      execution kernel of the framework's weighted value aggregation.
+      The production caller is ``ops.gathered_weighted_sum_dedup``
+      (``DedupGatherPlan``): ``row_src`` there is the batch's DEDUPLICATED,
+      value-index-SORTED selection union — ascending row ids, sentinel
+      slack at the tail — so co-selected value rows cost one DMA total and
+      adjacent indices form real contiguous runs for the chunk table to
+      pack into multi-row descriptors (hot PKM values: whole size-32/64
+      chunks instead of 128 singles). The kernel itself is layout-agnostic:
+      it just executes whatever chunk table ops._plan_runs derived, which
+      is why the flat per-selection ``GatherPlan``
+      (ops.gathered_weighted_sum, kept for tests/telemetry) runs through
+      the same code. PKM value lookup and the top-K MLP's sparse
+      down-projection lower here via dispatch.weighted_value_sum, so the
       value table never needs whole-array residency and no (N, S, d) dense
       gather is materialized at the XLA level.
 

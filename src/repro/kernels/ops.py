@@ -218,14 +218,31 @@ def make_moe_plan(idx: jax.Array, gates: jax.Array, n_tokens: int,
                     gate_tiles=gate_pad.reshape(m_pad // TM, TM))
 
 
-def plan_dma_stats(plan: CvmmPlan, n_rows: int) -> dict:
+def plan_dma_stats(plan, n_rows: int) -> dict:
     """Telemetry: one plan's gather-DMA descriptor counts — run-batched chunks
     (what each streamed kernel pass issues, ``run_len > 0`` entries) vs the
-    retired one-copy-per-row scheme (valid ``row_src`` slots)."""
-    per_row = int((np.asarray(plan.row_src) < n_rows).sum())
-    batched = int((np.asarray(plan.run_len) > 0).sum())
-    return {"per_row": per_row, "run_batched": batched,
-            "batching_factor": round(per_row / max(batched, 1), 3)}
+    retired one-copy-per-row scheme, plus a per-size-class chunk histogram
+    (``chunk_hist``: descriptor count per ``cvmm._RUN_SIZES`` class — shows
+    whether packing ever reaches the large classes, not just the totals).
+
+    Accepts any plan carrying ``row_src``/``run_len`` (CvmmPlan, GatherPlan,
+    DedupGatherPlan). For a ``DedupGatherPlan`` the per-row baseline is the
+    PRE-dedup selection count (one DMA per selected (token, slot) — what the
+    flat GatherPlan would issue without run luck), so ``batching_factor``
+    reports the full dedup+coalescing win; ``unique_rows`` records the
+    post-dedup row count separately."""
+    run_len = np.asarray(plan.run_len)
+    batched = int((run_len > 0).sum())
+    stats = {"chunk_hist": {str(int(s)): int((run_len == s).sum())
+                            for s in _RUN_SIZES}}
+    if isinstance(plan, DedupGatherPlan):
+        per_row = int(plan.sel_pos.shape[0])
+        stats["unique_rows"] = int((np.asarray(plan.row_src) < n_rows).sum())
+    else:
+        per_row = int((np.asarray(plan.row_src) < n_rows).sum())
+    stats.update(per_row=per_row, run_batched=batched,
+                 batching_factor=round(per_row / max(batched, 1), 3))
+    return stats
 
 
 def _float0(a: jax.Array):
@@ -400,6 +417,160 @@ def gathered_weighted_sum(values: jax.Array, plan: GatherPlan, n_tokens: int,
                                _pad_lane(values, 1), plan.row_src,
                                plan.tok_src, plan.run_start, plan.run_off,
                                plan.weight_tiles)
+    return y[:, :d]
+
+
+# ---------------------------------------------------------------------------
+# Deduplicated, value-index-sorted gather plan (the coalescing strategy:
+# million-value PKM / shared-row selections)
+# ---------------------------------------------------------------------------
+
+class DedupGatherPlan(NamedTuple):
+    """Layout metadata for one DEDUPLICATED weighted row gather-sum.
+
+    Where ``GatherPlan`` keeps slots in flat (token, slot) order — one DMA
+    slot per selection, shared rows copied once per selecting token — this
+    plan is built from the value-index-SORTED UNION of the batch's
+    selections: every row the batch touches appears exactly once, in
+    ascending row order. Co-selected rows collapse to one DMA and adjacent
+    value indices become real contiguous runs for ``_plan_runs`` to pack
+    into multi-row descriptors, so the compacted block streams HBM->VMEM
+    once regardless of how many tokens share it. Per-token weighting moves
+    to a scatter-side index indirection: ``sel_pos`` maps each flat
+    (token, slot) selection to its compacted slot, ``tok_src``/``weights``
+    carry the destination token and weight. All int fields get float0
+    cotangents; ``weights`` is the one differentiable leaf."""
+    row_src: jax.Array    # (U_pad,) SORTED unique value rows; ascending,
+                          #   sentinel n_rows on slack (sorts last, so the
+                          #   valid prefix stays contiguous)
+    run_start: jax.Array  # (U_pad,) per-tile DMA chunk table — same contract
+    run_len: jax.Array    #   as CvmmPlan/GatherPlan (ops._plan_runs);
+                          #   run_len is telemetry only
+    run_off: jax.Array    # (U_pad//TM * 9,) per-tile size-class bounds
+    sel_pos: jax.Array    # (M,) compacted slot of flat selection (token, s):
+                          #   row_src[sel_pos[t*S+s]] == idx[t, s]
+    tok_src: jax.Array    # (M,) destination token of each flat selection
+    weights: jax.Array    # (M,) float32 per-selection weight — applied in
+                          #   the scatter epilogue, not fused into the gather
+
+    @property
+    def u_pad(self) -> int:
+        return self.row_src.shape[0]
+
+
+def make_dedup_gather_plan(idx: jax.Array, weights: jax.Array,
+                           n_rows: int) -> DedupGatherPlan:
+    """Build the dedup/sorted plan for one weighted aggregation call.
+
+    idx (N, S) int row ids into a value table of ``n_rows`` rows, weights
+    (N, S) aggregation weights. Differentiable in ``weights``. The unique
+    set is computed at a STATIC size (jit-safe): at most min(N*S, n_rows)
+    distinct rows can exist, the remainder is sentinel slack. ``jnp.unique``
+    returns the uniques ascending with the fill value appended at the end,
+    which is exactly the sorted-prefix + sentinel-tail layout ``_plan_runs``
+    wants."""
+    n_tokens, s = idx.shape
+    m = n_tokens * s
+    u_cap = min(m, n_rows)
+    u_pad = round_up(u_cap, TM)
+    flat = idx.reshape(-1).astype(jnp.int32)
+    uniq, inv = jnp.unique(flat, size=u_cap, fill_value=n_rows,
+                           return_inverse=True)
+    row_src = jnp.pad(uniq.astype(jnp.int32), (0, u_pad - u_cap),
+                      constant_values=n_rows)
+    run_start, run_len, run_off = _plan_runs(row_src, n_rows)
+    tok_src = jnp.repeat(jnp.arange(n_tokens, dtype=jnp.int32), s)
+    return DedupGatherPlan(row_src=row_src, run_start=run_start,
+                           run_len=run_len, run_off=run_off,
+                           sel_pos=inv.reshape(-1).astype(jnp.int32),
+                           tok_src=tok_src,
+                           weights=weights.reshape(-1).astype(jnp.float32))
+
+
+def _gws_dedup_impl(static, values_pad, row_src, run_start, run_off, sel_pos,
+                    tok_src, weights):
+    n_tokens, interpret, n_buffers = static
+    # One streamed pass over the COMPACTED block: U_pad slots, not M.
+    rows = cvmm_gather_rows_pallas(values_pad, row_src, run_start, run_off,
+                                   interpret=interpret, n_buffers=n_buffers)
+    # Scatter-side indirection: expand compacted rows back to per-selection
+    # rows (a (M,)-index take, feature-dim cheap vs the HBM row traffic the
+    # dedup saved), weight, and scatter-add to tokens.
+    sel_rows = jnp.take(rows, sel_pos, axis=0)             # (M, d_pad)
+    wrows = (sel_rows.astype(jnp.float32) * weights[:, None]).astype(rows.dtype)
+    out = jnp.zeros((n_tokens, values_pad.shape[1]), rows.dtype)
+    return out.at[tok_src].add(wrows)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gathered_weighted_sum_dedup(static, values_pad, row_src, run_start,
+                                 run_off, sel_pos, tok_src, weights):
+    return _gws_dedup_impl(static, values_pad, row_src, run_start, run_off,
+                           sel_pos, tok_src, weights)
+
+
+def _gws_dedup_fwd(static, values_pad, row_src, run_start, run_off, sel_pos,
+                   tok_src, weights):
+    y = _gws_dedup_impl(static, values_pad, row_src, run_start, run_off,
+                        sel_pos, tok_src, weights)
+    return y, (values_pad, row_src, run_start, run_off, sel_pos, tok_src,
+               weights)
+
+
+def _gws_dedup_bwd(static, res, dy):
+    _, interpret, n_buffers = static
+    values_pad, row_src, run_start, run_off, sel_pos, tok_src, weights = res
+    dy_rows = jnp.take(dy, tok_src, axis=0)                # (M, d_pad)
+    # dweight[s] = dy[tok[s]] . V[idx[s]]: re-stream the compacted gather
+    # through the same plan and expand via the indirection (the forward never
+    # materialized the per-selection rows).
+    rows = cvmm_gather_rows_pallas(values_pad, row_src, run_start, run_off,
+                                   interpret=interpret, n_buffers=n_buffers)
+    dweights = jnp.sum(jnp.take(rows, sel_pos, axis=0).astype(jnp.float32)
+                       * dy_rows.astype(jnp.float32), axis=1)
+    # dV two-level scatter: selections first accumulate into the COMPACTED
+    # block (collisions only among tokens sharing a row), then the compacted
+    # block scatters to the table — sentinel slack rows drop, and each table
+    # row receives exactly one contribution.
+    dcompact = jnp.zeros((row_src.shape[0], values_pad.shape[1]), jnp.float32
+                         ).at[sel_pos].add(
+        dy_rows.astype(jnp.float32) * weights[:, None])
+    dvalues = jnp.zeros_like(values_pad).at[row_src].add(
+        dcompact.astype(values_pad.dtype), mode="drop")
+    return (dvalues, _float0(row_src), _float0(run_start), _float0(run_off),
+            _float0(sel_pos), _float0(tok_src), dweights)
+
+
+_gathered_weighted_sum_dedup.defvjp(_gws_dedup_fwd, _gws_dedup_bwd)
+
+
+def gathered_weighted_sum_dedup(values: jax.Array, plan: DedupGatherPlan,
+                                n_tokens: int, *,
+                                interpret: Optional[bool] = None,
+                                n_buffers: Optional[int] = None) -> jax.Array:
+    """Planned weighted row gather-sum over the DEDUPLICATED selection union.
+
+    Same contract as ``gathered_weighted_sum`` — y[t] = sum_s w[t,s] *
+    V[idx[t,s]] — but the streamed pass covers each selected row ONCE (sorted
+    ascending, so ``_plan_runs`` packs adjacent value indices into multi-row
+    descriptors) and the per-token weights apply through the plan's
+    scatter-side indirection. This is the production path for shared-row
+    selections (PKM value aggregation: hot values are co-selected across the
+    batch); at 1M+ values the HBM row traffic is the whole cost and dedup
+    bounds it by min(N*S, rows-actually-touched). ``n_buffers`` resolves
+    through the tuner's dedup-gather shape class when omitted."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d = values.shape[-1]
+    if n_buffers is None:
+        dec = autotune.dedup_gather_tiles(round_up(d, LANE),
+                                          jnp.dtype(values.dtype).itemsize,
+                                          budget=cvmm_mod.VMEM_BUDGET)
+        n_buffers = dec.tiles["n_buffers"] if dec.tiles is not None else None
+    y = _gathered_weighted_sum_dedup((n_tokens, interpret, n_buffers),
+                                     _pad_lane(values, 1), plan.row_src,
+                                     plan.run_start, plan.run_off,
+                                     plan.sel_pos, plan.tok_src, plan.weights)
     return y[:, :d]
 
 

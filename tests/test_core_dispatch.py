@@ -204,6 +204,101 @@ def test_pkm_planned_never_materializes_dense_gather(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# Two-stage product-key selection (C candidates per half) + million-value scale
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_candidates", [0, 6, 8])
+def test_two_stage_wider_candidates_matches_oracle(n_candidates):
+    """Any C >= K reproduces the full-score oracle exactly: the C*C candidate
+    grid contains the true top-K, so widening C must not change the output."""
+    cfg = _pkm_cfg(impl="pallas_fused_interpret", n_candidates=n_candidates)
+    cfg.validate()
+    p = init_pkm(jax.random.PRNGKey(0), D, cfg, 2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+    full = pkm_full_scores(p, x, cfg)
+    top, vidx = jax.lax.top_k(full, cfg.pkm_knn)
+    want = jnp.einsum("nhk,nhkd->nd", jax.nn.relu(top), p["values"][vidx])
+    got, _ = apply_pkm(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pkm_candidate_width_validation():
+    """configs satellite: an explicit candidate width below K (the containment
+    guarantee breaks) or above n_subkeys (impossible top-C) is an error with
+    a message naming the constraint; unset (0) means C = K."""
+    _pkm_cfg(n_candidates=6).validate()                         # K <= 6 <= ns
+    assert _pkm_cfg().pkm_candidates == 4                       # default C = K
+    assert _pkm_cfg(n_candidates=6).pkm_candidates == 6
+    with pytest.raises(AssertionError, match="C >= K"):
+        _pkm_cfg(n_candidates=2).validate()                     # 0 < C < K
+    with pytest.raises(AssertionError, match="n_subkeys"):
+        _pkm_cfg(n_candidates=16).validate()                    # C > ns
+
+
+def test_pkm_selection_scales_to_million_values():
+    """Acceptance: selection at n_values >= 1M (ns=1024) without the
+    (n_tokens, n_values) score matrix. With few tokens the full grid oracle
+    is still affordable — the two-stage top-K must match it exactly."""
+    cfg = _pkm_cfg(n_subkeys=1024, pkm_knn=4, n_candidates=16)
+    cfg.validate()
+    assert cfg.n_values == 1 << 20
+    h, half = cfg.pkm_heads, D // 2
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    p = {"keys_a": jax.random.normal(ka, (h, half, 1024)) * 0.02,
+         "keys_b": jax.random.normal(kb, (h, half, 1024)) * 0.02}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, D))
+    sel = pkm_select(p, x, cfg)
+    assert sel.n_items == 1 << 20
+    assert sel.idx.shape == (2, h * cfg.pkm_knn)
+    # oracle: the full (2, H, ns^2) grid — affordable only because N=2
+    full = pkm_full_scores(p, x, cfg)
+    top, vidx = jax.lax.top_k(full, cfg.pkm_knn)
+    want_w = np.sort(np.asarray(jax.nn.relu(top)).reshape(2, -1), axis=-1)
+    got_w = np.sort(np.asarray(sel.weights), axis=-1)
+    np.testing.assert_allclose(got_w, want_w, atol=1e-5, rtol=1e-5)
+    # the selected ids agree wherever the weight is alive (relu may zero ties)
+    want_ids = set(np.asarray(vidx).reshape(-1).tolist())
+    got_alive = np.asarray(sel.idx).reshape(-1)[
+        np.asarray(sel.weights).reshape(-1) > 0]
+    assert set(got_alive.tolist()) <= want_ids
+
+
+def test_pkm_million_value_dedup_aggregation(monkeypatch):
+    """Acceptance: the whole pipeline at n_values >= 1M — two-stage selection
+    + dedup-plan streamed aggregation over a (2^20, d) bf16 value table —
+    runs with neither the dense (N, S, d)-from-score-matrix path nor the
+    dense value gather, and matches the dense oracle on the same selection."""
+    def boom(*a, **kw):
+        raise AssertionError("million-value path materialized a dense gather")
+
+    monkeypatch.setattr(dispatch, "dense_value_gather", boom)
+    cfg = _pkm_cfg(impl="pallas_fused_interpret", n_subkeys=1024, pkm_knn=4,
+                   n_candidates=8)
+    d = 64
+    h, half = cfg.pkm_heads, d // 2
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    p = {"keys_a": jax.random.normal(ka, (h, half, 1024)) * 0.05,
+         "keys_b": jax.random.normal(kb, (h, half, 1024)) * 0.05}
+    # deterministic-pattern bf16 table built by broadcast-add (no 1M-row PRNG)
+    rows = jnp.arange(cfg.n_values, dtype=jnp.float32)[:, None]
+    cols = jnp.arange(d, dtype=jnp.float32)[None, :]
+    values = (jnp.sin(rows * 1e-3) + jnp.cos(cols)).astype(jnp.bfloat16)
+    p["values"] = values
+    # bf16 input end-to-end: apply_pkm casts the table to x.dtype, and a f32
+    # x would force a 256MB f32 copy of the 1M-row table
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, d)).astype(jnp.bfloat16)
+    y, _ = apply_pkm(p, x, cfg)
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    # dense oracle on the SAME (tiny) selection: only S rows are ever read
+    sel = pkm_select(p, x, cfg)
+    want = jnp.einsum("ns,nsd->nd", sel.weights.astype(jnp.float32),
+                      jnp.take(values, sel.idx, axis=0).astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(want),
+                               atol=0.1, rtol=0.1)
+
+
+# ---------------------------------------------------------------------------
 # Top-K MLP sparse down-projection via the planned layer
 # ---------------------------------------------------------------------------
 
@@ -330,13 +425,13 @@ def test_impl_knob_overrides_global_default(monkeypatch):
     """cfg.impl forces the rung regardless of ops.default_impl(); "auto"
     defers to it (set_default_impl still honored)."""
     called = {"n": 0}
-    orig = ops.gathered_weighted_sum
+    orig = ops.gathered_weighted_sum_dedup
 
     def spy(*a, **kw):
         called["n"] += 1
         return orig(*a, **kw)
 
-    monkeypatch.setattr(ops, "gathered_weighted_sum", spy)
+    monkeypatch.setattr(ops, "gathered_weighted_sum_dedup", spy)
     cfg = _pkm_cfg(impl="einsum")
     p = init_pkm(jax.random.PRNGKey(0), D, cfg, 2)
     x = jax.random.normal(jax.random.PRNGKey(1), (8, D))

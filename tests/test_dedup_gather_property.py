@@ -1,0 +1,233 @@
+"""Property suite for the deduplicated/sorted gather plan (ops.DedupGatherPlan
++ ops.gathered_weighted_sum_dedup) — the coalescing strategy behind
+million-value PKM aggregation.
+
+Covers the PR-7 contract:
+  - plan layout invariants: row_src is the ascending unique set with sentinel
+    tail, sel_pos/tok_src/weights index-indirect every flat (token, slot)
+    selection back to its compacted slot, and the chunk table covers the
+    valid prefix exactly (histogram mass == unique rows, descriptor count ==
+    run_batched telemetry).
+  - a numpy replay of the full execution: chunk-table gather of the compacted
+    block, then the scatter-side indirection (expand by sel_pos, weight,
+    scatter-add by tok_src) reproduces the einsum reference.
+  - fwd + bwd parity vs the dense ``impl="dense"`` oracle semantics across
+    duplicate-heavy selections, the all-unique worst case, and bf16.
+
+``hypothesis`` is an OPTIONAL dev dependency (requirements-dev.txt): the
+property tests are skipped when it is missing, and deterministic sweeps cover
+the same cases either way."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # module-level importorskip would hide the tests below
+    HAVE_HYPOTHESIS = False
+
+from repro.kernels import cvmm, ops
+
+
+def _mk_selection(n, s, r, seed, duplicate_heavy=False, all_unique=False):
+    """A (n, s) selection over r rows: duplicate_heavy concentrates on a hot
+    set of <= 8 rows (shared across tokens), all_unique makes every selection
+    a distinct row (requires n*s <= r)."""
+    rng = np.random.RandomState(seed)
+    if all_unique:
+        assert n * s <= r
+        idx = rng.choice(r, size=n * s, replace=False).reshape(n, s)
+    elif duplicate_heavy:
+        hot = rng.choice(r, size=min(8, r), replace=False)
+        idx = hot[rng.randint(0, len(hot), size=(n, s))]
+    else:
+        idx = rng.randint(0, r, size=(n, s))
+    w = rng.randn(n, s).astype(np.float32)
+    return jnp.asarray(idx.astype(np.int32)), jnp.asarray(w)
+
+
+def _dense_oracle(values, idx, w):
+    """The impl="dense" semantics: full (N, S, d) take + einsum, in f32."""
+    rows = jnp.take(values, idx, axis=0).astype(jnp.float32)
+    return jnp.einsum("ns,nsd->nd", w.astype(jnp.float32), rows)
+
+
+# ---------------------------------------------------------------------------
+# Plan layout + numpy replay of the compacted scatter indirection
+# ---------------------------------------------------------------------------
+
+def _check_plan_invariants(idx, w, r):
+    n, s = idx.shape
+    m = n * s
+    plan = ops.make_dedup_gather_plan(idx, w, r)
+    row_src = np.asarray(plan.row_src)
+    sel_pos = np.asarray(plan.sel_pos)
+    tok_src = np.asarray(plan.tok_src)
+    weights = np.asarray(plan.weights)
+    flat = np.asarray(idx).reshape(-1)
+
+    # row_src: ascending unique prefix, sentinel tail, TM-padded
+    assert plan.u_pad % ops.TM == 0
+    uniq = np.unique(flat)
+    nu = len(uniq)
+    np.testing.assert_array_equal(row_src[:nu], uniq)
+    assert (row_src[nu:] == r).all()
+    # indirection: every flat selection maps back to its own row id / token
+    assert sel_pos.shape == tok_src.shape == weights.shape == (m,)
+    np.testing.assert_array_equal(row_src[sel_pos], flat)
+    np.testing.assert_array_equal(tok_src, np.repeat(np.arange(n), s))
+    np.testing.assert_allclose(weights, np.asarray(w).reshape(-1), rtol=1e-6)
+    return plan, nu
+
+
+def _replay_chunks(plan, r, values):
+    """Numpy re-execution of the chunk table the way the kernel walks it (one
+    loop per static size class over run_off boundaries): returns the gathered
+    compacted block and the descriptor count."""
+    rs = np.asarray(plan.row_src)
+    rst = np.asarray(plan.run_start)
+    rl = np.asarray(plan.run_len)
+    nc = len(cvmm._RUN_SIZES)
+    ro = np.asarray(plan.run_off).reshape(-1, nc + 1)
+    out = np.zeros((plan.u_pad, values.shape[1]), np.float32)
+    n_dma = 0
+    for t in range(plan.u_pad // ops.TM):
+        for ci, sz in enumerate(cvmm._RUN_SIZES):
+            for j in range(ro[t, ci], ro[t, ci + 1]):
+                assert int(rl[t * ops.TM + j]) == sz
+                off = int(rst[t * ops.TM + j])
+                src = int(rs[t * ops.TM + off])
+                assert src + sz <= r, "chunk overruns the value table"
+                out[t * ops.TM + off: t * ops.TM + off + sz] = \
+                    values[src: src + sz]
+                n_dma += 1
+    return out, n_dma
+
+
+def _check_replay(idx, w, r, d=16, seed=0):
+    """End-to-end numpy replay: chunk-table gather -> sel_pos expansion ->
+    weight -> tok_src scatter-add == the einsum reference."""
+    n, s = idx.shape
+    plan, nu = _check_plan_invariants(idx, w, r)
+    values = np.random.RandomState(seed).randn(r, d).astype(np.float32)
+    block, n_dma = _replay_chunks(plan, r, values)
+    # compacted scatter indirection, in numpy
+    sel_rows = block[np.asarray(plan.sel_pos)]              # (M, d)
+    wrows = sel_rows * np.asarray(plan.weights)[:, None]
+    got = np.zeros((n, d), np.float32)
+    np.add.at(got, np.asarray(plan.tok_src), wrows)
+    want = np.asarray(_dense_oracle(jnp.asarray(values), idx, w))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    # telemetry invariants: descriptor count matches, histogram mass covers
+    # every unique row exactly once, dedup never exceeds one-per-selection
+    stats = ops.plan_dma_stats(plan, r)
+    assert stats["run_batched"] == n_dma
+    assert stats["unique_rows"] == nu
+    assert stats["per_row"] == n * s
+    hist = stats["chunk_hist"]
+    assert sum(hist.values()) == n_dma
+    assert sum(int(sz) * c for sz, c in hist.items()) == nu
+    assert 0 < n_dma <= nu <= n * s
+    return stats
+
+
+def test_dedup_plan_duplicate_heavy_replay():
+    """Hot-set selections: dedup collapses shared rows, so the descriptor
+    count is bounded by the hot-set size, not the selection count."""
+    idx, w = _mk_selection(64, 8, 1000, seed=0, duplicate_heavy=True)
+    stats = _check_replay(idx, w, 1000)
+    assert stats["unique_rows"] <= 8
+    assert stats["batching_factor"] >= 64.0    # 512 selections, <= 8 DMAs
+
+
+def test_dedup_plan_all_unique_worst_case():
+    """No sharing at all: dedup buys nothing, but the plan must still be
+    exact and never issue MORE descriptors than one per selection."""
+    idx, w = _mk_selection(16, 4, 4096, seed=1, all_unique=True)
+    stats = _check_replay(idx, w, 4096)
+    assert stats["unique_rows"] == 64
+    assert stats["run_batched"] <= 64
+
+
+def test_dedup_plan_adjacent_rows_coalesce():
+    """Adjacent value indices form real contiguous runs: a selection covering
+    one dense 128-row block is a single size-128 descriptor."""
+    idx = jnp.arange(128, dtype=jnp.int32).reshape(16, 8) + 100
+    w = jnp.ones((16, 8), jnp.float32)
+    stats = _check_replay(idx, w, 1 << 20)
+    assert stats["chunk_hist"]["128"] == 1
+    assert stats["run_batched"] == 1
+    assert stats["batching_factor"] == 128.0
+
+
+# ---------------------------------------------------------------------------
+# fwd + bwd parity vs the dense oracle (kernel execution, interpret mode)
+# ---------------------------------------------------------------------------
+
+def _check_parity(idx, w, r, d, dtype, seed=2):
+    n = idx.shape[0]
+    values = jax.random.normal(jax.random.PRNGKey(seed), (r, d),
+                               jnp.float32).astype(dtype)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+
+    def planned(values, w):
+        plan = ops.make_dedup_gather_plan(idx, w, r)
+        return ops.gathered_weighted_sum_dedup(values, plan, n, interpret=True)
+
+    got = planned(values, w)
+    want = _dense_oracle(values, idx, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+    probe = lambda y: jnp.sum(y.astype(jnp.float32) *
+                              jnp.cos(jnp.arange(y.size).reshape(y.shape)))
+    gv, gw = jax.grad(lambda v, w: probe(planned(v, w)), (0, 1))(values, w)
+    rv, rw = jax.grad(lambda v, w: probe(_dense_oracle(v, idx, w)),
+                      (0, 1))(values, w)
+    gtol = 1e-4 if dtype == jnp.float32 else 0.1
+    np.testing.assert_allclose(np.asarray(gv, np.float32),
+                               np.asarray(rv, np.float32),
+                               atol=gtol, rtol=gtol)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw),
+                               atol=gtol, rtol=gtol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", ["duplicate_heavy", "all_unique", "mixed"])
+def test_dedup_gws_parity_sweep(dtype, shape):
+    """Deterministic sweep (no hypothesis needed): fwd+bwd == dense oracle
+    across sharing regimes and dtypes."""
+    idx, w = _mk_selection(24, 4, 256, seed=3,
+                           duplicate_heavy=shape == "duplicate_heavy",
+                           all_unique=shape == "all_unique")
+    _check_parity(idx, w, 256, 24, dtype)
+
+
+def test_dedup_gws_single_token_and_constant_row():
+    """Edge cases: one token, and every slot selecting the SAME row (maximal
+    collision on the compacted backward scatter)."""
+    idx = jnp.full((8, 4), 7, jnp.int32)
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+    _check_parity(idx, w, 32, 16, jnp.float32)
+    idx1 = jnp.asarray([[3, 9, 9, 0]], jnp.int32)
+    w1 = jnp.asarray([[1.0, -2.0, 0.5, 3.0]], jnp.float32)
+    _check_parity(idx1, w1, 16, 16, jnp.float32)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 32), st.integers(1, 6), st.integers(4, 300),
+           st.integers(0, 2 ** 31 - 1), st.booleans())
+    def test_dedup_plan_replay_property(n, s, r, seed, duplicate_heavy):
+        """Hypothesis: plan invariants + numpy replay == reference for random
+        selection shapes, duplicate-heavy or uniform."""
+        idx, w = _mk_selection(n, s, r, seed=seed % (2 ** 31 - 1),
+                               duplicate_heavy=duplicate_heavy and r >= 8)
+        _check_replay(idx, w, r, d=8, seed=seed % 1000)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+    def test_dedup_plan_replay_property():
+        pass
