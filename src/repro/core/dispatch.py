@@ -196,8 +196,29 @@ def _sort_path(params: Dict, xf: jax.Array, cfg: FFNConfig,
     expert id (the paper's CUDA kernel does exactly this reordering); 3.
     grouped matmul where row-groups share an expert matrix; 4. scatter-add
     results back per token, weighted by the gates.
+
+    Under an active mesh the whole pipeline is pinned to REPLICATED: the
+    grouped GEMMs here are not GSPMD-partitionable — ``jax.lax.ragged_dot``
+    with expert-sharded weights silently returns wrong values (observed on
+    jax 0.4.37: the partitioner slices the group dim without reconciling
+    group_sizes), and the pallas custom calls can't be partitioned either.
+    The sort path is the single-shard rung of the capability chain;
+    "einsum" (GSPMD) and "shard_map" (explicit EP) are the sharded
+    dispatches.
     """
     from ..kernels import ops as kops  # local import: kernels optional at import
+
+    mesh = current_mesh()
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        rep = NamedSharding(mesh, P())
+        xf = jax.lax.with_sharding_constraint(xf, rep)
+        info = info._replace(
+            idx=jax.lax.with_sharding_constraint(info.idx, rep),
+            gates=jax.lax.with_sharding_constraint(info.gates, rep))
+        params = {name: (jax.lax.with_sharding_constraint(v, rep)
+                         if name in ("we1", "we1g", "we2") else v)
+                  for name, v in params.items()}
 
     n, d = xf.shape
     k = cfg.k
@@ -330,16 +351,83 @@ def _einsum_path(params: Dict, xf: jax.Array, cfg: FFNConfig,
     return y, dropped
 
 
+def _ep_local_plan(e_local: int, cap_g: int, n_experts_hint: int = 0):
+    """The expert-sharded CvmmPlan one EP shard executes: after the dispatch
+    all_to_all, a shard holds a DENSE (E/mp, C*mp, d) capacity buffer — every
+    row's expert is known statically (row r belongs to expert r // cap_g), so
+    the plan is input-independent and built once per (E/mp, C*mp) shape from
+    concrete arrays (it closes over the shard_map body as constants). Riding
+    ``make_moe_plan`` keeps EP on the same layout/chunk-table machinery as the
+    dropless sort path, so ``ops.plan_dma_stats`` telemetry (descriptor
+    counts, chunk_hist) stays meaningful under expert parallelism."""
+    from ..kernels import ops as kops
+    n_rows = e_local * cap_g
+    idx = jnp.repeat(jnp.arange(e_local, dtype=jnp.int32), cap_g)[:, None]
+    gates = jnp.ones((n_rows, 1), jnp.float32)
+    return kops.make_moe_plan(idx, gates, n_rows, e_local)
+
+
+def ep_plan_stats(cfg: FFNConfig, n_tokens: int, e: int, mesh) -> Dict:
+    """Telemetry: DMA-descriptor stats of the CvmmPlan an EP shard runs for a
+    given (token count, expert count, mesh). The EP buffer is fully
+    contiguous, so the plan packs whole tiles into single descriptors —
+    benchmarks/tests assert the batching factor survives under EP."""
+    from ..kernels import ops as kops
+    mp = mesh.shape["model"]
+    n_shards = 1
+    for a in mesh.axis_names:
+        n_shards *= mesh.shape[a]
+    cap = _capacity(n_tokens // n_shards, cfg.k, e, cfg.capacity_factor)
+    e_local, cap_g = e // mp, cap * mp
+    plan = _ep_local_plan(e_local, cap_g)
+    stats = kops.plan_dma_stats(plan, e_local * cap_g)
+    stats.update(e_local=e_local, capacity=cap, rows_per_shard=e_local * cap_g)
+    return stats
+
+
+def _ep_local_ffn(cfg: FFNConfig, buf: jax.Array, w1, w2, w1g):
+    """One EP shard's expert FFN on its (E_local, C_g, d) dispatch buffer,
+    lowered through the shared execution machinery: the planned/grouped CVMM
+    (``ops.cvmm`` — pallas kernels or XLA ragged_dot, same capability chain as
+    the sort path) instead of a bespoke einsum. ``impl="einsum"/"dense"``
+    keeps the einsum as the reference rung."""
+    from ..kernels import ops as kops
+    impl = resolve_impl(cfg)
+    e_local, cap_g, d = buf.shape
+    if impl in ("einsum", "dense"):
+        h = jnp.einsum("ecd,edg->ecg", buf, w1)
+        hg = jnp.einsum("ecd,edg->ecg", buf, w1g) if w1g is not None else None
+        u = _expert_ffn(cfg, h, hg)
+        return jnp.einsum("ecg,egd->ecd", u, w2)
+    rows = buf.reshape(e_local * cap_g, d)                 # expert-major: sorted
+    group_sizes = jnp.full((e_local,), cap_g, jnp.int32)
+    cvmm_impl = impl if impl.startswith("pallas") else "ragged"
+    h = kops.cvmm(rows, group_sizes, w1, impl=cvmm_impl)
+    hg = (kops.cvmm(rows, group_sizes, w1g, impl=cvmm_impl)
+          if w1g is not None else None)
+    u = _expert_ffn(cfg, h, hg)
+    out = kops.cvmm(u, group_sizes, w2, impl=cvmm_impl)
+    return out.reshape(e_local, cap_g, d)
+
+
 def _shard_map_path(params: Dict, xf: jax.Array, cfg: FFNConfig,
                     info: SelectionInfo, e: int) -> Tuple[jax.Array, jax.Array]:
-    """Explicit EP (GShard pattern): tokens sharded over EVERY mesh axis; expert
-    weights sharded over 'model'.
+    """Explicit EP (GShard pattern), two-tier under a multi-host mesh: tokens
+    sharded over EVERY mesh axis; expert weights sharded over 'model' — the
+    intra-pod ICI axis — and REPLICATED over the DCN 'pod' axis (each pod
+    holds a full expert copy; the pod tier carries data parallelism, and its
+    gradient all-reduce is where optim/compress.py error-feedback compression
+    engages — wired in runtime/steps.py).
 
     Per device: pack its token block into an (E, C, d) capacity buffer, one
     all_to_all along 'model' (split experts, concat capacity) -> (E/mp, C*mp, d),
-    local FFN with the resident expert shard, inverse all_to_all, local combine.
-    Exactly 2 all_to_alls per MoE layer -- the collective-minimal dispatch that the
-    einsum/GSPMD path only approximates (see EXPERIMENTS.md SPerf).
+    local FFN with the resident expert shard (through the planned CVMM
+    machinery — ``_ep_local_ffn``), inverse all_to_all, local combine.
+    Exactly 2 all_to_alls per MoE layer, both intra-pod — the
+    collective-minimal dispatch that the einsum/GSPMD path only approximates
+    (see EXPERIMENTS.md SPerf). Capacity overflow accounting (the dropped
+    fraction) is pmean'd over the whole mesh so telemetry matches the global
+    drop rate.
     """
     mesh = current_mesh()
     n, d = xf.shape
@@ -366,10 +454,7 @@ def _shard_map_path(params: Dict, xf: jax.Array, cfg: FFNConfig,
         buf, meta = _pack_capacity(xl, infol, e, cap)          # (E, C, d)
         buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
                                  tiled=True)                   # (E/mp, C*mp, d)
-        h = jnp.einsum("ecd,edg->ecg", buf, w1)
-        hg = jnp.einsum("ecd,edg->ecg", buf, w1g) if w1g is not None else None
-        u = _expert_ffn(cfg, h, hg)
-        out = jnp.einsum("ecg,egd->ecd", u, w2)                # (E/mp, C*mp, d)
+        out = _ep_local_ffn(cfg, buf, w1, w2, w1g)             # (E/mp, C*mp, d)
         out = jax.lax.all_to_all(out, "model", split_axis=1, concat_axis=0,
                                  tiled=True)                   # (E, C, d)
         y = _combine_capacity(out, infol, meta, xl.shape[0])

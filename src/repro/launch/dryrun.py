@@ -1,6 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax-touching import: jax locks the device count on first init.
+_DEFAULT_XLA_FLAGS = "--xla_force_host_platform_device_count=512"
+_PRESET_XLA_FLAGS = bool(os.environ.get("XLA_FLAGS"))
+os.environ.setdefault("XLA_FLAGS", _DEFAULT_XLA_FLAGS)
+# ^ MUST precede any jax-touching import: jax locks the device count on first
+# init. An externally-set XLA_FLAGS wins (e.g. the CI mesh gate forces 8 host
+# devices and runs the local-mesh smoke mode below); the 512-device default
+# only applies when the caller set nothing.
 
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on the
 production meshes, prove the distribution config is coherent, and extract the
@@ -14,6 +19,20 @@ roofline terms from the compiled artifact.
 Per cell it prints compiled.memory_analysis() (fits-in-HBM evidence) and
 cost_analysis(), and writes <out>/<tag>/<arch>__<shape>__<mesh>.json with the
 roofline report (EXPERIMENTS.md is generated from these files).
+
+Local-mesh smoke mode (--mesh local, the DEFAULT when XLA_FLAGS is preset in
+the environment): builds a mesh from whatever devices the process actually has
+— (data=n/2, model=2), plus a leading 'pod' axis with --pod — and EXECUTES a
+real train step on a reduced config instead of only lowering. This is the
+regression gate for the sharding-rules layer (the seed ``--ffn pkm``
+duplicate-PartitionSpec crash died exactly here, in tree_shardings before any
+compile) and for the EP/pod-tier wiring:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.dryrun --ffn pkm
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.dryrun --ffn sigma_moe \
+        --dispatch shard_map --pod 2 --grad-compression int8
 """
 import argparse
 import dataclasses
@@ -141,11 +160,80 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, sp: bool, remat: str
     return result
 
 
+def run_local_smoke(args) -> int:
+    """Execute (not just compile) train steps on a local-device mesh.
+
+    Proves the full path end-to-end: sharding-rules setup (tree_shardings is
+    where the seed PKM duplicate-axis bug crashed), dispatch (incl. the EP
+    shard_map all_to_all path), and — with --pod > 1 and --grad-compression —
+    the pod-tier compressed gradient reduction.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import reduced
+    from ..configs.base import OptimizerConfig
+    from ..models import build_model
+    from ..runtime.steps import init_train_state, make_train_step
+    from ..sharding import TRAIN_RULES, mesh_context, tree_shardings
+    from .mesh import make_local_mesh
+
+    arch = args.arch or "wt103-47m-moe"
+    mesh = make_local_mesh(model=args.model_axis, pod=args.pod)
+    print(f"--- local smoke: {arch} ffn={args.ffn or 'cfg'} "
+          f"dispatch={args.dispatch or 'cfg'} mesh="
+          f"{dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"compression={args.grad_compression} ---", flush=True)
+
+    cfg = reduced(arch)
+    if cfg.xl_memory:
+        # the smoke executes stateless steps (and the pod tier rejects
+        # xl_memory outright) — drop the XL memory from the reduced config.
+        cfg = cfg.override(xl_memory=0)
+    if args.dispatch and cfg.ffn.kind in ("sigma_moe", "switch", "sbase",
+                                          "noisy_topk"):
+        cfg = cfg.with_ffn(dataclasses.replace(cfg.ffn, dispatch=args.dispatch))
+    model = build_model(cfg, remat=args.remat, ep_degree=mesh.shape["model"],
+                        ffn=args.ffn)
+    cfg = model.cfg
+
+    pod = mesh.shape["pod"] if "pod" in mesh.axis_names else 1
+    opt_cfg = OptimizerConfig(lr=1e-3, total_steps=max(args.steps, 2),
+                              grad_compression=args.grad_compression)
+    batch_size = 8 * pod
+    seq = 32
+    with mesh_context(mesh):
+        state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg, pod=pod)
+        shardings = tree_shardings(state, mesh, TRAIN_RULES)
+        state = jax.device_put(state, shardings)
+        step_fn = jax.jit(make_train_step(model, opt_cfg, mesh=mesh),
+                          donate_argnums=(0,))
+        rng = jax.random.PRNGKey(1)
+        t0 = time.time()
+        for s in range(args.steps):
+            tokens = jax.random.randint(jax.random.fold_in(rng, s),
+                                        (batch_size, seq + 1), 0, cfg.vocab_size)
+            state, metrics = step_fn(state, {"tokens": tokens}, rng)
+            loss = float(metrics["loss"])
+            if not (loss == loss):            # NaN guard
+                print(f"step {s}: loss is NaN", flush=True)
+                return 1
+            print(f"step {s} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+    print(f"LOCAL SMOKE OK ({args.steps} executed step(s), "
+          f"{time.time() - t0:.1f}s)", flush=True)
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
-    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--mesh", default=None,
+                    choices=["single", "multi", "both", "local"],
+                    help="production mesh kind, or 'local' to execute a train-"
+                         "step smoke on this process's devices (the default "
+                         "when XLA_FLAGS is preset in the environment)")
     ap.add_argument("--all", action="store_true", help="all (arch x shape) cells")
     ap.add_argument("--sp", action="store_true", help="sequence-parallel residuals")
     ap.add_argument("--remat", default="full", choices=["none", "dots", "full"])
@@ -156,7 +244,24 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="benchmarks/dryrun_results")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--skip-existing", action="store_true")
+    # local smoke mode knobs
+    ap.add_argument("--steps", type=int, default=1,
+                    help="local mode: number of train steps to EXECUTE")
+    ap.add_argument("--model-axis", type=int, default=2,
+                    help="local mode: size of the 'model' mesh axis")
+    ap.add_argument("--pod", type=int, default=1,
+                    help="local mode: size of the DCN 'pod' axis (pod-tier "
+                         "gradient compression engages with --grad-compression)")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "bf16", "int8"])
     args = ap.parse_args(argv)
+
+    if args.mesh is None:
+        # An externally forced device count means the caller wants a smoke on
+        # THAT topology, not the 512-device production lowering sweep.
+        args.mesh = "local" if _PRESET_XLA_FLAGS else "single"
+    if args.mesh == "local":
+        return run_local_smoke(args)
 
     from ..configs import ASSIGNED_ARCHS, SHAPES
 

@@ -37,8 +37,25 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh(model: int = 1):
-    """Whatever this host has: (data=n/model, model) -- used by tests/examples."""
+def make_local_mesh(model: int = 1, pod: int = 1):
+    """Whatever this host has: (data=n/(pod*model), model), with a leading DCN
+    'pod' axis when pod > 1 -- used by tests/examples/local dry-runs.
+
+    Raises when the requested axis sizes do not tile the device count: the old
+    behavior silently built a (n//model, model) mesh that DROPPED devices (8
+    devices, model=3 -> a 6-device mesh with 2 chips idle).
+    """
     n = len(jax.devices())
-    model = min(model, n)
-    return jax.make_mesh((n // model, model), ("data", "model"))
+    if model < 1 or pod < 1:
+        raise ValueError(f"mesh axis sizes must be >= 1, got model={model} pod={pod}")
+    if n % (model * pod):
+        divisors = [d for d in range(1, n + 1) if n % d == 0]
+        raise ValueError(
+            f"make_local_mesh: model={model} * pod={pod} does not divide the "
+            f"device count {n} — a (n//model, model) mesh would silently drop "
+            f"{n - (n // (model * pod)) * model * pod} device(s). Pick axis "
+            f"sizes whose product divides {n} (divisors: {divisors}).")
+    data = n // (model * pod)
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

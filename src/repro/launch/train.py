@@ -92,7 +92,16 @@ def main(argv=None) -> int:
     opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,
                               grad_accum=args.grad_accum,
                               grad_compression=args.grad_compression)
-    train_step = make_train_step(model, opt_cfg, grad_accum=args.grad_accum)
+    # Mesh-aware step: with a 'pod' axis of size > 1 and compression on, the
+    # expert-gradient all-reduce over the DCN tier goes through per-pod
+    # error-feedback quantization (runtime/steps.py pod tier) instead of a
+    # host-local roundtrip.
+    pod = mesh.shape["pod"] if "pod" in mesh.axis_names else 1
+    if pod > 1 and args.grad_compression != "none":
+        print(f"[mesh] pod tier active: {args.grad_compression} error-feedback "
+              f"compression on the expert subtree across pod={pod}", flush=True)
+    train_step = make_train_step(model, opt_cfg, grad_accum=args.grad_accum,
+                                 mesh=mesh)
 
     ds = make_dataset(args.data, cfg.vocab_size)
     it = DataIterator(ds, args.batch, args.seq + 1, seed=args.seed)
@@ -104,7 +113,7 @@ def main(argv=None) -> int:
     with mesh_context(mesh):
         key = jax.random.PRNGKey(args.seed)
         state = init_train_state(model, key, opt_cfg, use_mems=bool(cfg.xl_memory),
-                                 batch=args.batch)
+                                 batch=args.batch, pod=pod)
         shardings = tree_shardings(state, mesh, TRAIN_RULES)
         state = jax.device_put(state, shardings)
 

@@ -32,7 +32,11 @@ def build_model(cfg_or_name: Union[str, ModelConfig], *, remat: str = "none",
                                          topk_k=max(64, d_ff // 8)))
         elif ffn == "pkm":
             ns = max(4, int(d_ff ** 0.5))
-            cfg = cfg.with_ffn(FFNConfig(kind="pkm", n_subkeys=ns))
+            # each half produces only n_subkeys scores, so K (and hence the
+            # candidate count C, which defaults to K) must clamp to it on
+            # reduced configs; production archs have ns >= 32 and keep K=32.
+            knn = min(FFNConfig.pkm_knn, ns)
+            cfg = cfg.with_ffn(FFNConfig(kind="pkm", n_subkeys=ns, pkm_knn=knn))
         elif ffn in ("dense", "glu"):
             cfg = cfg.with_ffn(FFNConfig(kind=ffn, d_ff=d_ff,
                                          activation=cfg.ffn.activation or "relu"))

@@ -1,8 +1,10 @@
 from .adamw import adamw_init, adamw_update, OptState
 from .schedule import make_schedule
-from .compress import compress_grads, init_compression_state
+from .compress import (EXPERT_PARAM_NAMES, compress_grads, compress_pod_grads,
+                       init_compression_state, is_expert_leaf)
 from .clip import clip_by_global_norm, global_norm
 
 __all__ = ["adamw_init", "adamw_update", "OptState", "make_schedule",
-           "compress_grads", "init_compression_state", "clip_by_global_norm",
+           "compress_grads", "compress_pod_grads", "init_compression_state",
+           "is_expert_leaf", "EXPERT_PARAM_NAMES", "clip_by_global_norm",
            "global_norm"]

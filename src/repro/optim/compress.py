@@ -7,8 +7,28 @@ added back into the next step's gradient, which keeps SGD/Adam convergence
 (Karimireddy et al. 2019).
 
 Modes: "bf16" (cast), "int8" (per-tensor absmax scale). The compressed representation
-is what a DCN-aware collective would put on the wire; under single-program SPMD we
-apply it before the optimizer so the numerics match the deployed system.
+is what a DCN-aware collective would put on the wire.
+
+Two wirings:
+
+``compress_grads``
+    The single-host roundtrip on the fully reduced gradient (legacy path, kept
+    for meshes without a 'pod' axis): one shared error state, applied before
+    the optimizer.
+
+``compress_pod_grads``
+    The multi-host wiring (runtime/steps.py engages it whenever the mesh has a
+    'pod' axis of size > 1 and compression is on). Input gradients carry a
+    leading per-pod dimension — pod p's slice is its PARTIAL gradient, the
+    contribution of its local batch shard BEFORE the cross-pod reduction.
+    Each pod adds its own residual, quantizes, and what crosses the pod axis
+    (the mean over the leading dim, which the partitioner lowers to the DCN
+    all-reduce once the stacked grads are sharded over 'pod') is exactly the
+    compressed wire values. Error state is per-pod: leading dim pod_size,
+    sharded over the 'pod' mesh axis (sharding/logical.py 'pod_err' rule).
+    Only the expert-parameter subtree (``EXPERT_PARAM_NAMES`` leaves — the
+    bulk of an expert-parallel model's gradient bytes) is compressed; every
+    other leaf takes the exact all-reduce and keeps a placeholder residual.
 """
 from __future__ import annotations
 
@@ -17,10 +37,38 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+# The expert-parameter subtree: the sparse-FFN tables that dominate gradient
+# bytes under expert parallelism. Dense trunk params (attention, norms,
+# embeddings, routers) keep the exact DCN all-reduce.
+EXPERT_PARAM_NAMES = frozenset(
+    {"we1", "we1g", "we2", "keys_a", "keys_b", "values"})
 
-def init_compression_state(params):
-    return jax.tree_util.tree_map(
-        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None) or getattr(entry, "name", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def is_expert_leaf(path) -> bool:
+    return _leaf_name(path) in EXPERT_PARAM_NAMES
+
+
+def init_compression_state(params, pod: int = 1):
+    """Error-feedback residuals. pod <= 1: one params-shaped residual per leaf
+    (legacy whole-tree roundtrip). pod > 1: per-pod residuals with a leading
+    pod dim on the EXPERT leaves (each pod's quantization error is its own);
+    non-compressed leaves hold a (1,) placeholder so the state tree structure
+    stays checkpoint-stable."""
+    if pod <= 1:
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, p: (jnp.zeros((pod,) + p.shape, jnp.float32)
+                         if is_expert_leaf(path) else jnp.zeros((1,), jnp.float32)),
+        params)
 
 
 def _roundtrip(g: jax.Array, mode: str) -> jax.Array:
@@ -28,6 +76,20 @@ def _roundtrip(g: jax.Array, mode: str) -> jax.Array:
         return g.astype(jnp.bfloat16).astype(jnp.float32)
     if mode == "int8":
         scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q.astype(jnp.float32) * scale
+    raise ValueError(mode)
+
+
+def _roundtrip_stacked(g: jax.Array, mode: str) -> jax.Array:
+    """Per-pod roundtrip on a (pod, ...) stack: each pod quantizes its own
+    slice (per-slice absmax scale for int8 — pods see different partials)."""
+    if mode == "bf16":
+        return g.astype(jnp.bfloat16).astype(jnp.float32)
+    if mode == "int8":
+        axes = tuple(range(1, g.ndim))
+        scale = jnp.maximum(jnp.max(jnp.abs(g), axis=axes, keepdims=True),
+                            1e-12) / 127.0
         q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
         return q.astype(jnp.float32) * scale
     raise ValueError(mode)
@@ -47,3 +109,34 @@ def compress_grads(grads, err_state, mode: str) -> Tuple[Any, Any]:
     flat_e = td.flatten_up_to(err_state)
     out = [one(g, e) for g, e in zip(flat_g, flat_e)]
     return (td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out]))
+
+
+def compress_pod_grads(pod_grads, err_state, mode: str) -> Tuple[Any, Any]:
+    """Cross-pod reduction with compressed expert gradients.
+
+    ``pod_grads``: pytree whose leaves are (pod, *param_shape) PARTIAL
+    gradients (one slice per pod, pre-reduction). ``err_state``: matching
+    per-pod residuals from ``init_compression_state(params, pod=...)``.
+
+    Expert leaves: wire_p = Q(g_p + e_p) per pod, reduced = mean_p wire_p,
+    new residual e_p = (g_p + e_p) - wire_p. Other leaves: exact mean, and
+    the placeholder residual passes through. Returns (reduced grads — no
+    leading pod dim — in the input dtype, new error state)."""
+    if mode == "none":
+        return (jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0)
+                                       .astype(g.dtype), pod_grads), err_state)
+
+    flat_g, treedef = jax.tree_util.tree_flatten_with_path(pod_grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    outs, errs = [], []
+    for (path, g), e in zip(flat_g, flat_e):
+        if is_expert_leaf(path):
+            gf = g.astype(jnp.float32) + e
+            wire = _roundtrip_stacked(gf, mode)
+            outs.append(jnp.mean(wire, axis=0).astype(g.dtype))
+            errs.append(gf - wire)
+        else:
+            outs.append(jnp.mean(g, axis=0).astype(g.dtype))
+            errs.append(e)
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, errs))

@@ -1,10 +1,12 @@
 from .context import current_mesh, mesh_context, axis_size
-from .logical import (LogicalRules, TRAIN_RULES, SERVE_RULES, logical_sharding,
-                      serve_rules_for, spec_for, tree_shardings,
+from .logical import (DuplicateMeshAxisError, LogicalRules, TRAIN_RULES,
+                      SERVE_RULES, logical_sharding, serve_rules_for, spec_for,
+                      spec_for_axes, strict_duplicate_check, tree_shardings,
                       with_logical_constraint)
 
 __all__ = [
-    "current_mesh", "mesh_context", "axis_size", "LogicalRules", "TRAIN_RULES",
-    "SERVE_RULES", "logical_sharding", "serve_rules_for", "spec_for", "tree_shardings",
-    "with_logical_constraint",
+    "current_mesh", "mesh_context", "axis_size", "DuplicateMeshAxisError",
+    "LogicalRules", "TRAIN_RULES", "SERVE_RULES", "logical_sharding",
+    "serve_rules_for", "spec_for", "spec_for_axes", "strict_duplicate_check",
+    "tree_shardings", "with_logical_constraint",
 ]

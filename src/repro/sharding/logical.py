@@ -10,9 +10,27 @@ Two built-in rule sets:
                + DP batch over (pod, data). Optimizer state inherits param specs.
   SERVE_RULES  TP-only weights (latency path, no per-layer all-gathers), KV cache and
                batch over (pod, data).
+
+Duplicate-mesh-axis resolution
+------------------------------
+A NamedSharding may map each mesh axis to at most ONE positional dimension, but a
+logical-axes tuple can legally rule two of its entries onto the same mesh axis (the
+seed bug: PKM ``keys_a``/``keys_b`` were ``("heads", "embed", "pkm_keys")`` with both
+'heads' and 'pkm_keys' ruled to 'model' -> ``PartitionSpec(None, 'model', 'data',
+'model')`` crashed every ``--ffn pkm`` mesh run at sharding setup). ``spec_for_axes``
+therefore resolves duplicates deterministically: the FIRST (leftmost) occurrence of a
+mesh axis keeps it, every repeat is dropped to None (for tuple rules, the repeated
+member is removed from the tuple). Tests run under STRICT mode
+(``strict_duplicate_check()`` context manager, or ``REPRO_STRICT_SHARDING=1``), where
+a duplicate instead raises ``DuplicateMeshAxisError`` naming the leaf path, the mesh
+axis, and the two conflicting logical axes — so a bad ``PARAM_AXES``/rules entry fails
+the sweep in tests/test_sharding_multidev.py instead of shipping a silent layout.
 """
 from __future__ import annotations
 
+import contextlib
+import os
+import threading
 from typing import Dict, Optional, Tuple, Union
 
 import jax
@@ -22,6 +40,33 @@ from .context import current_mesh
 
 Axis = Union[None, str, Tuple[str, ...]]
 LogicalRules = Dict[str, Axis]
+
+
+class DuplicateMeshAxisError(ValueError):
+    """Strict mode: one logical-axes tuple ruled a mesh axis onto two dims."""
+
+
+_strict_state = threading.local()
+
+
+def _strict_enabled(override: Optional[bool]) -> bool:
+    if override is not None:
+        return override
+    flag = getattr(_strict_state, "strict", None)
+    if flag is not None:
+        return flag
+    return os.environ.get("REPRO_STRICT_SHARDING", "") not in ("", "0")
+
+
+@contextlib.contextmanager
+def strict_duplicate_check(enabled: bool = True):
+    """Within this context, duplicate mesh axes raise instead of resolving."""
+    prev = getattr(_strict_state, "strict", None)
+    _strict_state.strict = enabled
+    try:
+        yield
+    finally:
+        _strict_state.strict = prev
 
 TRAIN_RULES: LogicalRules = {
     "batch": ("pod", "data"),
@@ -38,6 +83,12 @@ TRAIN_RULES: LogicalRules = {
     "layers": None,
     "pkm_values": "model",
     "pkm_keys": "model",
+    "pkm_heads": None,           # PKM heads stay local: 'pkm_keys' owns 'model'
+                                 # for the key tables (two dims on one mesh axis
+                                 # is illegal — see header)
+    "shared_experts": None,      # shared-expert count (usually 1) stays local:
+                                 # 'ffn' owns 'model' for those leaves
+    "pod_err": "pod",            # pod-stacked error-feedback state (optim/compress)
     "ssm_inner": "model",
     "ssm_state": None,
     "conv": None,
@@ -93,15 +144,18 @@ PARAM_AXES: Dict[Tuple[str, int], Tuple[str, ...]] = {
     ("we1", 3): ("experts", "embed", "expert_ff"),
     ("we1g", 3): ("experts", "embed", "expert_ff"),
     ("we2", 3): ("experts", "expert_ff", "embed"),
-    # shared experts: n=1 so the experts axis drops; shard their ffn over model
-    ("shared_w1", 3): ("experts", "embed", "ffn"),
-    ("shared_w1g", 3): ("experts", "embed", "ffn"),
-    ("shared_w2", 3): ("experts", "ffn", "embed"),
+    # shared experts: the count (usually 1) stays local under 'shared_experts'
+    # so 'ffn' alone claims 'model' — ("experts", ..., "ffn") put 'model' on
+    # two dims of one leaf, the same class of bug as the pkm key tables.
+    ("shared_w1", 3): ("shared_experts", "embed", "ffn"),
+    ("shared_w1g", 3): ("shared_experts", "embed", "ffn"),
+    ("shared_w2", 3): ("shared_experts", "ffn", "embed"),
     ("router", 2): ("embed", None),
     ("router_noise", 2): ("embed", None),
-    # pkm
-    ("keys_a", 3): ("heads", "embed", "pkm_keys"),
-    ("keys_b", 3): ("heads", "embed", "pkm_keys"),
+    # pkm (heads local — 'heads' and 'pkm_keys' both ruled to 'model' was the
+    # seed duplicate-axis crash; the key dim is the one worth sharding)
+    ("keys_a", 3): ("pkm_heads", "embed", "pkm_keys"),
+    ("keys_b", 3): ("pkm_heads", "embed", "pkm_keys"),
     ("values", 2): ("pkm_values", "embed"),
     # mamba2 / ssd
     ("in_proj", 2): ("embed", "ssm_inner"),
@@ -125,19 +179,42 @@ PARAM_AXES: Dict[Tuple[str, int], Tuple[str, ...]] = {
 
 
 def spec_for_axes(axes: Tuple[Optional[str], ...], rules: LogicalRules,
-                  mesh: Optional[Mesh]) -> P:
-    """Logical axes tuple -> PartitionSpec, dropping mesh axes that don't exist."""
+                  mesh: Optional[Mesh], *, strict: Optional[bool] = None,
+                  path: str = "") -> P:
+    """Logical axes tuple -> PartitionSpec, dropping mesh axes that don't exist.
+
+    A mesh axis appearing twice (two logical axes ruled onto it, or twice within
+    one tuple rule) resolves deterministically: first occurrence wins, repeats
+    drop to None. Strict mode (``strict_duplicate_check()`` /
+    ``REPRO_STRICT_SHARDING=1``) raises ``DuplicateMeshAxisError`` instead,
+    naming the leaf ``path`` and both conflicting logical axes."""
     names = set(mesh.axis_names) if mesh is not None else set()
     out = []
+    used: Dict[str, Optional[str]] = {}   # mesh axis -> logical axis that claimed it
     for ax in axes:
         m = rules.get(ax) if ax is not None else None
-        if m is None:
+        members = () if m is None else (m if isinstance(m, tuple) else (m,))
+        kept = []
+        for a in members:
+            if a not in names:
+                continue
+            if a in used:
+                if _strict_enabled(strict):
+                    raise DuplicateMeshAxisError(
+                        f"mesh axis '{a}' mapped to two dims of one leaf"
+                        f"{' at ' + path if path else ''}: logical axis "
+                        f"'{used[a]}' already claimed it, '{ax}' repeats it "
+                        f"(logical axes {axes}). Fix PARAM_AXES/rules so each "
+                        f"mesh axis shards at most one dim per leaf.")
+                continue                   # keep first occurrence, drop repeat
+            kept.append(a)
+            used[a] = ax
+        if not kept:
             out.append(None)
         elif isinstance(m, tuple):
-            kept = tuple(a for a in m if a in names)
-            out.append(kept if kept else None)
+            out.append(tuple(kept))
         else:
-            out.append(m if m in names else None)
+            out.append(kept[0])
     return P(*out)
 
 
@@ -151,16 +228,31 @@ def _leaf_axes(name: str, rank: int) -> Tuple[Optional[str], ...]:
     return (None,) * rank                              # replicate unknown leaves
 
 
-def spec_for(path, leaf, rules: LogicalRules, mesh: Optional[Mesh]) -> P:
-    name = None
-    for entry in reversed(path):
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for entry in path:
         key = getattr(entry, "key", None) or getattr(entry, "name", None)
         if isinstance(key, str):
-            name = key
-            break
+            out.append(key)
+    return tuple(out)
+
+
+def spec_for(path, leaf, rules: LogicalRules, mesh: Optional[Mesh],
+             strict: Optional[bool] = None) -> P:
+    keys = _path_keys(path)
+    name = keys[-1] if keys else None
     rank = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
     axes = _leaf_axes(name or "", rank)
-    spec = spec_for_axes(axes, rules, mesh)
+    # Pod-stacked error-feedback state (optim/compress.init_compression_state
+    # with pod>1): leaves under the "err" subtree carry a leading per-pod dim
+    # on top of the param layout — shard it over the DCN 'pod' axis so each
+    # pod stores only its own quantization residual.
+    if keys and keys[0] == "err" and rank >= 1:
+        inner = _leaf_axes(name or "", rank - 1)
+        if (name, rank - 1) in PARAM_AXES or any(a is not None for a in inner):
+            axes = ("pod_err",) + inner
+    spec = spec_for_axes(axes, rules, mesh, strict=strict,
+                         path=jax.tree_util.keystr(path))
     # jax.Array inputs require evenly divisible shardings: drop (replicate) any axis
     # that does not divide its dimension (e.g. whisper's vocab 51865 over 16-way TP,
     # 8 KV heads over 16-way TP). GSPMD-internal constraints may still pad; inputs
