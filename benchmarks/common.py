@@ -9,13 +9,12 @@ the layer implementations. Table-level CSV: name,us_per_call,derived.
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, moe_ffn
 from repro.configs.base import AttentionConfig, FFNConfig, ModelConfig, OptimizerConfig
 from repro.data import DataIterator, make_dataset
 from repro.models import build_model

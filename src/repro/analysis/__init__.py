@@ -1,0 +1,48 @@
+"""Kernel-contract analyzer: static verification of the invariants the
+Pallas kernels, plan builders, tile pickers, and sharding tables rely on —
+proven offline, before any kernel launches or mesh is built.
+
+Module map
+----------
+report.py     ``Finding`` / ``Report`` containers. Every pass returns
+              ``(findings, checks)`` — violations plus the count of facts it
+              verified, so an accidentally-empty sweep cannot look clean.
+pipeline.py   Pass 1: DMA-pipeline hazard checker. Replays the kernels' OWN
+              ``cvmm.stream_schedule_step`` control skeleton with recording
+              callbacks over every (family, depth, grid, pass-count) and
+              proves issue/wait pairing, no slot overwrite, waited-data
+              compute, exact coverage, and clean warmup/drain.
+plans.py      Pass 2: plan-invariant verifier. Numpy re-execution of the DMA
+              chunk tables (exactly-once coverage, legal boundaries, never
+              fetching sentinel slack) plus the per-plan structural
+              invariants; ``ops.plan_dma_stats(verify=True)`` and the
+              property tests call the same oracle.
+vmem.py       Pass 3: VMEM-budget prover. Enumerates every tile candidate
+              the autotuner can emit and proves fit against an independently
+              itemized launch inventory; cross-checks the tuner's ws_*
+              formulas and the (width, depth) pairs ops.py actually threads.
+sharding.py   Pass 4: sharding-table analyzer. PARAM_AXES x rule sets x
+              every registered mesh axis layout under strict duplicate
+              detection, plus full registry-model leaf closure and the
+              pod_err wrapping.
+check.py      The CLI (``python -m repro.analysis.check --all``) and the
+              ``run_passes`` library entry CI and tests share.
+
+The passes verify the real artifacts — the shared schedule skeleton, real
+``ops.make_*_plan`` outputs, the tuner's real candidate enumerator, real
+``eval_shape`` model trees — so a seeded mutation in production code is
+caught here, not just in whichever integration test happens to hit it.
+"""
+from .report import Finding, Report
+
+__all__ = ["Finding", "PASSES", "Report", "run_passes"]
+
+
+def __getattr__(name):
+    # Lazy: ``python -m repro.analysis.check`` imports this package first,
+    # and an eager ``from .check import ...`` would put check.py in
+    # sys.modules before runpy executes it (RuntimeWarning).
+    if name in ("PASSES", "run_passes"):
+        from . import check
+        return getattr(check, name)
+    raise AttributeError(name)

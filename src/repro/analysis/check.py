@@ -1,0 +1,67 @@
+"""CLI entry point: ``python -m repro.analysis.check [--all | per-pass flags]``.
+
+Runs the kernel-contract passes and exits non-zero on any finding — CI runs
+``--all`` as a hard gate before the benchmark job. ``--json PATH`` writes the
+machine-readable report (uploaded as a CI artifact) in the ``Report.to_dict``
+schema: {ok, checks: {pass: n}, n_findings, findings: [...]}.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from .report import Report
+
+PASSES = ("pipeline", "plans", "vmem", "sharding")
+
+
+def run_passes(names: Sequence[str]) -> Report:
+    """Library entry: run the named passes, return the aggregate Report."""
+    report = Report()
+    for name in names:
+        if name == "pipeline":
+            from .pipeline import check_pipeline as fn
+        elif name == "plans":
+            from .plans import check_plans as fn
+        elif name == "vmem":
+            from .vmem import check_vmem as fn
+        elif name == "sharding":
+            from .sharding import check_sharding as fn
+        else:
+            raise ValueError(f"unknown analysis pass {name!r} "
+                             f"(have {', '.join(PASSES)})")
+        findings, checks = fn()
+        report.add(name, findings, checks)
+    return report
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="Static kernel-contract verification (DMA pipelines, "
+                    "plan invariants, VMEM budgets, sharding rules).")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when no pass flag given)")
+    for name in PASSES:
+        ap.add_argument(f"--{name}", action="store_true",
+                        help=f"run the {name} pass")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the JSON report to PATH")
+    args = ap.parse_args(argv)
+
+    selected = [name for name in PASSES if getattr(args, name)]
+    if args.all or not selected:
+        selected = list(PASSES)
+
+    report = run_passes(selected)
+    print(report.summary())
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(report.to_json())
+        print(f"json report: {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,166 @@
+"""Pass 1: DMA-pipeline hazard checker for the streamed gather kernels.
+
+The streamed kernels in ``kernels/cvmm.py`` (fused w1, bare gather, the dW
+streams) all drive their HBM->VMEM row DMAs through ONE control skeleton,
+``cvmm.stream_schedule_step`` — the kernels bind real
+``_gather_issue``/``_gather_wait`` callbacks and a traced grid index, while
+this pass replays the SAME function with recording callbacks over every
+concrete grid in a sweep. Because the skeleton is shared (not transcribed),
+a schedule bug — a dropped wait, an off-by-one warmup, an unguarded prefetch
+— changes both the kernels and the replay, and the replay proves it here
+before a kernel ever corrupts data at runtime.
+
+What is proven, per (pipeline family x depth x grid length x pass count):
+
+  issue/wait pairing   every ``wait(t)`` matches the in-flight DMA of the same
+                       tile in the same slot (the per-slot semaphore is FIFO;
+                       a mismatched wait would consume another tile's signal)
+  no slot overwrite    an ``issue`` never targets a slot whose previous DMA
+                       has not been waited (the zero-fill + fresh DMA would
+                       race the in-flight copy)
+  compute reads waited data   the compute step of tile ``i`` reads the slot
+                       that holds tile ``i``'s waited data, not a slot a later
+                       prefetch already clobbered
+  coverage             every tile 0..m_tiles-1 is issued exactly once and
+                       waited exactly once per pass; no out-of-range tile is
+                       ever issued (its chunk table does not exist)
+  warmup/drain         boundary grids (``m_tiles < n_buffers``) stay legal,
+                       and no DMA is left in flight at the end of a pass — the
+                       dW kernels re-enter the stream once per outer pass, so
+                       a leaked DMA would collide with the next warmup
+
+Depths swept: ``autotune.SUPPORTED_DEPTHS`` (2/3/4) — the union of what any
+family's candidate enumerator can emit — for every entry in
+``cvmm.STREAMED_PIPELINES``.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from ..kernels import autotune, cvmm
+from .report import Finding
+
+# Grid lengths swept: 1..MAX_TILES covers every warmup/drain regime — grids
+# shorter than the deepest pipeline, equal to it, and long enough that the
+# steady state (wait + prefetch) repeats.
+MAX_TILES = 9
+REENTRANT_PASSES = (1, 3)
+
+
+def replay_stream(m_tiles: int, n_buffers: int,
+                  n_passes: int = 1) -> List[Tuple[str, int, int]]:
+    """Replay ``cvmm.stream_schedule_step`` over a concrete grid.
+
+    Returns the flat event list [(kind, tile, slot), ...] with kind one of
+    "issue" / "wait" / "compute" / "pass_end" (tile = pass index, slot = -1
+    for pass_end markers), exactly in the order the kernel executes them."""
+    events: List[Tuple[str, int, int]] = []
+
+    def issue(t):
+        events.append(("issue", int(t), int(cvmm.stream_slot(t, n_buffers))))
+
+    def wait(t):
+        events.append(("wait", int(t), int(cvmm.stream_slot(t, n_buffers))))
+
+    def when(cond, fn):
+        if cond:
+            fn()
+
+    for p in range(n_passes):
+        for i in range(m_tiles):
+            slot = cvmm.stream_schedule_step(i, m_tiles, n_buffers,
+                                             issue=issue, wait=wait, when=when)
+            events.append(("compute", i, int(slot)))
+        events.append(("pass_end", p, -1))
+    return events
+
+
+def check_stream(m_tiles: int, n_buffers: int, n_passes: int = 1,
+                 family: str = "stream") -> Tuple[List[Finding], int]:
+    """Verify one replayed schedule against the hazard invariants."""
+    loc = (f"{family} depth={n_buffers} m_tiles={m_tiles}"
+           + (f" passes={n_passes}" if n_passes > 1 else ""))
+
+    def bad(check: str, detail: str) -> Finding:
+        return Finding("pipeline", check, loc, detail)
+
+    findings: List[Finding] = []
+    checks = 0
+    in_flight = {}          # slot -> tile whose DMA has been issued, not waited
+    resident = {}           # slot -> tile whose data has been waited (readable)
+    issued = {}             # tile -> issue count, this pass
+    waited = {}             # tile -> wait count, this pass
+
+    for kind, t, slot in replay_stream(m_tiles, n_buffers, n_passes):
+        if kind == "issue":
+            checks += 3
+            if not (0 <= t < m_tiles):
+                findings.append(bad(
+                    "issue-out-of-range",
+                    f"issued tile {t}, but the grid has {m_tiles} tiles — "
+                    f"its chunk table does not exist"))
+            if slot in in_flight:
+                findings.append(bad(
+                    "slot-overwrite",
+                    f"issue of tile {t} zero-fills slot {slot} while tile "
+                    f"{in_flight[slot]}'s DMA into it is still in flight"))
+            issued[t] = issued.get(t, 0) + 1
+            if issued[t] > 1:
+                findings.append(bad(
+                    "double-issue",
+                    f"tile {t} issued {issued[t]} times in one pass"))
+            in_flight[slot] = t
+            resident.pop(slot, None)          # zero-fill clobbers old data
+        elif kind == "wait":
+            checks += 1
+            if in_flight.get(slot) != t:
+                have = in_flight.get(slot)
+                findings.append(bad(
+                    "wait-mismatch",
+                    f"wait for tile {t} on slot {slot}, but the slot holds "
+                    + (f"tile {have}'s DMA" if have is not None
+                       else "no in-flight DMA — the wait would hang or "
+                            "consume a stale semaphore signal")))
+            else:
+                del in_flight[slot]
+                resident[slot] = t
+            waited[t] = waited.get(t, 0) + 1
+        elif kind == "compute":
+            checks += 1
+            if resident.get(slot) != t:
+                findings.append(bad(
+                    "compute-unwaited",
+                    f"compute of tile {t} reads slot {slot}, which holds "
+                    f"{'tile %s' % resident[slot] if slot in resident else 'no waited data'}"))
+        else:  # pass_end
+            checks += 2
+            if in_flight:
+                findings.append(bad(
+                    "leaked-dma",
+                    f"pass ended with DMA(s) still in flight: "
+                    f"{sorted(in_flight.items())} — the next warmup would "
+                    f"overwrite them"))
+            missing = [i for i in range(m_tiles)
+                       if issued.get(i, 0) != 1 or waited.get(i, 0) != 1]
+            if missing:
+                findings.append(bad(
+                    "coverage",
+                    f"tiles not issued+waited exactly once this pass: "
+                    f"{missing} (issued={issued}, waited={waited})"))
+            issued, waited = {}, {}
+    return findings, checks
+
+
+def check_pipeline() -> Tuple[List[Finding], int]:
+    """Sweep every streamed-pipeline family at every supported depth."""
+    findings: List[Finding] = []
+    checks = 0
+    for family, info in sorted(cvmm.STREAMED_PIPELINES.items()):
+        passes = REENTRANT_PASSES if info["reentrant"] else (1,)
+        for depth in autotune.SUPPORTED_DEPTHS:
+            for m_tiles in range(1, MAX_TILES + 1):
+                for n_passes in passes:
+                    f, c = check_stream(m_tiles, depth, n_passes, family)
+                    findings += f
+                    checks += c
+    return findings, checks

@@ -23,7 +23,7 @@ import re
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np

@@ -56,7 +56,7 @@ reference for tests and ablations.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -351,7 +351,7 @@ def _einsum_path(params: Dict, xf: jax.Array, cfg: FFNConfig,
     return y, dropped
 
 
-def _ep_local_plan(e_local: int, cap_g: int, n_experts_hint: int = 0):
+def ep_local_plan(e_local: int, cap_g: int, n_experts_hint: int = 0):
     """The expert-sharded CvmmPlan one EP shard executes: after the dispatch
     all_to_all, a shard holds a DENSE (E/mp, C*mp, d) capacity buffer — every
     row's expert is known statically (row r belongs to expert r // cap_g), so
@@ -359,12 +359,17 @@ def _ep_local_plan(e_local: int, cap_g: int, n_experts_hint: int = 0):
     concrete arrays (it closes over the shard_map body as constants). Riding
     ``make_moe_plan`` keeps EP on the same layout/chunk-table machinery as the
     dropless sort path, so ``ops.plan_dma_stats`` telemetry (descriptor
-    counts, chunk_hist) stays meaningful under expert parallelism."""
+    counts, chunk_hist) stays meaningful under expert parallelism — and the
+    plan-invariant pass (repro.analysis.plans) verifies the EP shard plans
+    through this entry point, not a re-derivation."""
     from ..kernels import ops as kops
     n_rows = e_local * cap_g
     idx = jnp.repeat(jnp.arange(e_local, dtype=jnp.int32), cap_g)[:, None]
     gates = jnp.ones((n_rows, 1), jnp.float32)
     return kops.make_moe_plan(idx, gates, n_rows, e_local)
+
+
+_ep_local_plan = ep_local_plan        # shard_map bodies predate the public name
 
 
 def ep_plan_stats(cfg: FFNConfig, n_tokens: int, e: int, mesh) -> Dict:
@@ -379,8 +384,8 @@ def ep_plan_stats(cfg: FFNConfig, n_tokens: int, e: int, mesh) -> Dict:
         n_shards *= mesh.shape[a]
     cap = _capacity(n_tokens // n_shards, cfg.k, e, cfg.capacity_factor)
     e_local, cap_g = e // mp, cap * mp
-    plan = _ep_local_plan(e_local, cap_g)
-    stats = kops.plan_dma_stats(plan, e_local * cap_g)
+    plan = ep_local_plan(e_local, cap_g)
+    stats = kops.plan_dma_stats(plan, e_local * cap_g, verify=True)
     stats.update(e_local=e_local, capacity=cap, rows_per_shard=e_local * cap_g)
     return stats
 

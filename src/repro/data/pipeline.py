@@ -13,8 +13,7 @@ measurably within tens of steps -- used by the integration tests).
 from __future__ import annotations
 
 import dataclasses
-import os
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

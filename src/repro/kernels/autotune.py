@@ -78,7 +78,20 @@ TUNE_TOP_K = 3                # candidates surviving the roofline pruning
 BENCH_ITERS = 3               # min-of-N timing per surviving candidate
 M_REF_TILES = 8               # reference row-tile count for cost + bench
 STEP_OVERHEAD_S = 2e-6        # fixed per-grid-step cost in the roofline model
-_DEPTHS = (2, 3)              # stream pipeline depths enumerated when tuning
+
+# Stream pipeline depths each family's candidate enumerator may emit when
+# tuning is enabled (disabled -> depth 2 only, the static heuristic). This
+# table — not the enumerator bodies — is what repro.analysis reads to know
+# which (family, depth) pairs need a hazard proof and a VMEM fit proof, so a
+# new depth added here is automatically swept by both passes.
+FAMILY_DEPTHS: Dict[str, tuple] = {
+    "pick_tn": (),                # blocked GEMM: no gather stream
+    "fused_w1": (2, 3),
+    "streamed_dw": (2, 3),
+    "gather": (2, 3, 4),          # bare gather is DMA-bound: depth 4 can pay
+    "gather_dedup": (2, 3, 4),
+}
+SUPPORTED_DEPTHS = (2, 3, 4)      # union; every streamed kernel accepts these
 
 STATS = {"microbench_calls": 0, "cache_hits": 0, "tuned": 0,
          "cache_invalid": 0}
@@ -226,7 +239,7 @@ def _cand_fused_w1(dims, budget):
     k_pad, b = dims["k_pad"], dims["b"]
     nw, no = dims["n_weights"], dims["n_out"]
     out = []
-    for depth in _DEPTHS if enabled() else (2,):
+    for depth in FAMILY_DEPTHS["fused_w1"] if enabled() else (2,):
         out += [{"tm": TM, "tn": tn, "n_buffers": depth}
                 for tn in _dividing_widths(dims["n_pad"])
                 if ws_fused_w1(k_pad, tn, b, nw, no, depth) <= budget]
@@ -253,7 +266,7 @@ def _cost_fused_w1(dims, tiles, hw):
 def _cand_streamed_dw(dims, budget):
     sw, b = dims["stream_w"], dims["b"]
     out = []
-    for depth in _DEPTHS if enabled() else (2,):
+    for depth in FAMILY_DEPTHS["streamed_dw"] if enabled() else (2,):
         out += [{"tm": TM, "tb": tb, "n_buffers": depth}
                 for tb in _dividing_widths(dims["block_w"])
                 if ws_streamed_dw(sw, tb, b, depth) <= budget]
@@ -279,7 +292,7 @@ def _cost_streamed_dw(dims, tiles, hw):
 
 def _cand_gather(dims, budget):
     k_pad, b = dims["k_pad"], dims["b"]
-    depths = _DEPTHS + (4,) if enabled() else (2,)
+    depths = FAMILY_DEPTHS["gather"] if enabled() else (2,)
     return [{"tm": TM, "n_buffers": d} for d in depths
             if ws_gather(k_pad, b, d) <= budget]
 
@@ -461,6 +474,32 @@ _FAMILIES: Dict[str, _Family] = {
     "gather_dedup": _Family(_cand_gather, _cost_gather_dedup,
                             _bench_gather_dedup, "sorted"),
 }
+
+
+def families() -> tuple:
+    """Every kernel family the tuner can resolve (analysis sweeps these)."""
+    return tuple(_FAMILIES)
+
+
+def enumerate_candidates(family: str, dims: Dict[str, int], *,
+                         budget: Optional[int] = None,
+                         tuned: bool = True) -> List[Dict[str, int]]:
+    """Every tile candidate ``decide(family, dims)`` could ever return — the
+    exact list the tuner ranks, heuristic answer first.
+
+    ``tuned=True`` enumerates the full tuning-enabled candidate space (all
+    ``FAMILY_DEPTHS`` entries); ``tuned=False`` restricts to what the disabled
+    tuner can emit. The VMEM-budget prover (repro.analysis.vmem) walks this
+    with an independently derived working-set model: any candidate surviving
+    here but busting the budget there is a tile-picker regression caught
+    before a kernel ever launches."""
+    budget = budget if budget is not None else default_vmem_budget()
+    prev = _ENABLED
+    enable(tuned)
+    try:
+        return _FAMILIES[family].candidates(dims, budget)
+    finally:
+        enable(prev)
 
 
 # ---------------------------------------------------------------------------

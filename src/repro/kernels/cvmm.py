@@ -117,6 +117,18 @@ keyed per backend precisely so a CPU-tuned cache never leaks into TPU runs.
 Every kernel entry point also accepts explicit tile arguments (``tn`` / ``tb``
 / ``n_buffers``) so ops.py can resolve tiles once per plan and thread them
 through forward and backward instead of re-querying per call.
+
+Static checks
+-------------
+The pipeline contract above is not prose-only: ``stream_schedule_step`` is the
+executable source of truth for the issue/wait schedule, and
+``repro.analysis.pipeline`` replays it over concrete grids at every supported
+depth, proving issue/wait pairing per slot, no overwrite of an in-flight slot,
+and clean warmup/drain (including ``n_tiles < n_buffers`` and the dW kernels'
+per-pass re-entry). ``python -m repro.analysis.check --all`` runs that proof
+plus the plan-invariant, VMEM-budget, and sharding-table passes; CI gates on
+it. When changing the schedule, the chunk-table layout, or a working-set
+formula, run the checker first — it fails faster than a miscompiled kernel.
 """
 from __future__ import annotations
 
@@ -323,6 +335,54 @@ def cvmm_dw_pallas(x_pad: jax.Array, tile_expert: jax.Array, g_pad: jax.Array,
 # first. A full tile is one size-TM descriptor; isolated rows are size 1.
 _RUN_SIZES = tuple(1 << b for b in range(TM.bit_length() - 1, -1, -1))
 
+# The streamed-pipeline users of stream_schedule_step, in the analyzer's terms:
+# how many sequential grid passes walk the row tiles per launch. The dW kernels
+# re-enter the stream at i == 0 once per outer (blocked-width) pass; the fused
+# w1 kernel steps the stream only on the first N-tile of each row tile, so it
+# behaves as the single-pass gather. repro.analysis.pipeline replays every
+# entry here at every supported depth.
+STREAMED_PIPELINES = {
+    "fused_w1": dict(reentrant=False),     # grid (m, n); stream stepped at j==0
+    "gather": dict(reentrant=False),       # grid (m,)
+    "dw_streamed": dict(reentrant=True),   # grid (b, m), m innermost; the
+                                           # stream restarts on every b pass
+}
+
+
+def stream_slot(t, n_buffers: int):
+    """Scratch slot holding row tile ``t`` at pipeline depth ``n_buffers``.
+
+    Pure arithmetic shared by the kernels (traced ``t``) and the static hazard
+    checker in ``repro.analysis.pipeline`` (concrete ``t``)."""
+    return t % n_buffers
+
+
+def stream_schedule_step(i, m_tiles: int, n_buffers: int, *, issue, wait,
+                         when):
+    """Control skeleton of the streamed gather pipeline at row tile ``i`` —
+    THE source of truth for the issue/wait schedule.
+
+    The Pallas kernels execute it with real DMA callbacks and a traced ``i``
+    (``when`` is ``pl.when``); the static hazard checker
+    (``repro.analysis.pipeline``) replays it with recording callbacks over
+    concrete grids and proves issue/wait pairing, no slot overwrite before its
+    wait, and clean warmup/drain — including ``m_tiles < n_buffers`` — at
+    every supported depth. Editing the schedule here changes the kernels AND
+    what the analyzer verifies; the seeded-mutant tests rely on that.
+
+    Schedule: warm-up at i == 0 issues tiles 0..n_buffers-2 (statically
+    unrolled; guarded so a short grid never touches a missing tile's chunk
+    table), every step waits for tile ``i`` (issued n_buffers-1 steps
+    earlier), then prefetches tile ``i + n_buffers - 1`` into the slot that
+    just freed — suppressed past the last tile so no DMA is left in flight at
+    the end of a pass. Returns the slot holding tile ``i``."""
+    when(i == 0, lambda: issue(0))
+    for t in range(1, n_buffers - 1):
+        when((i == 0) & (t < m_tiles), lambda t=t: issue(t))
+    wait(i)
+    when(i + n_buffers - 1 < m_tiles, lambda: issue(i + n_buffers - 1))
+    return stream_slot(i, n_buffers)
+
 
 def _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
               sem_ref, slot, *, wait: bool):
@@ -364,7 +424,7 @@ def _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
 def _gather_issue(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
                   sem_ref, n_buffers: int = N_BUFFERS):
     """Zero slot ``t % n_buffers`` and start the run-batched DMAs of tile ``t``."""
-    slot = jax.lax.rem(t, n_buffers)
+    slot = stream_slot(t, n_buffers)
     xs_ref[slot] = jnp.zeros(xs_ref.shape[1:], xs_ref.dtype)
     _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
               sem_ref, slot, wait=False)
@@ -373,7 +433,7 @@ def _gather_issue(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
 def _gather_wait(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
                  sem_ref, n_buffers: int = N_BUFFERS):
     """Wait for every DMA chunk issued by ``_gather_issue`` for tile ``t``."""
-    slot = jax.lax.rem(t, n_buffers)
+    slot = stream_slot(t, n_buffers)
     _run_dmas(t, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
               sem_ref, slot, wait=True)
 
@@ -392,31 +452,23 @@ def _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
     Kernels whose row-tile loop is an inner grid dimension (the streamed dW
     kernels) re-enter at i == 0 once per outer pass: the warm-up re-issues its
     tiles and prefetches past the last tile are suppressed, so no DMA is left
-    in flight across pass boundaries."""
+    in flight across pass boundaries.
+
+    The actual issue/wait ordering lives in ``stream_schedule_step`` (shared
+    with the static hazard checker); this wrapper only binds the DMA
+    callbacks."""
     m_tiles = pl.num_programs(axis)
 
-    @pl.when(i == 0)
-    def _warmup():
-        _gather_issue(0, row_src_ref, run_start_ref, run_off_ref, x_hbm,
+    def issue(t):
+        _gather_issue(t, row_src_ref, run_start_ref, run_off_ref, x_hbm,
                       xs_ref, sem_ref, n_buffers)
 
-    # Deeper pipelines also pre-issue tiles 1..n_buffers-2 (statically
-    # unrolled; guarded — a 1-tile grid must not touch tile 1's chunk table).
-    for t in range(1, n_buffers - 1):
-        @pl.when(jnp.logical_and(i == 0, t < m_tiles))
-        def _warmup_deep(t=t):
-            _gather_issue(t, row_src_ref, run_start_ref, run_off_ref, x_hbm,
-                          xs_ref, sem_ref, n_buffers)
+    def wait(t):
+        _gather_wait(t, row_src_ref, run_start_ref, run_off_ref, x_hbm,
+                     xs_ref, sem_ref, n_buffers)
 
-    _gather_wait(i, row_src_ref, run_start_ref, run_off_ref, x_hbm, xs_ref,
-                 sem_ref, n_buffers)
-
-    @pl.when(i + n_buffers - 1 < m_tiles)
-    def _prefetch_next():
-        _gather_issue(i + n_buffers - 1, row_src_ref, run_start_ref,
-                      run_off_ref, x_hbm, xs_ref, sem_ref, n_buffers)
-
-    return jax.lax.rem(i, n_buffers)
+    return stream_schedule_step(i, m_tiles, n_buffers, issue=issue, wait=wait,
+                                when=lambda cond, fn: pl.when(cond)(fn))
 
 
 def _fused_w1_body(row_src_ref, run_start_ref, run_off_ref, x_hbm, w1_ref,
@@ -428,7 +480,7 @@ def _fused_w1_body(row_src_ref, run_start_ref, run_off_ref, x_hbm, w1_ref,
     def _():
         _stream_tile(i, row_src_ref, run_start_ref, run_off_ref, x_hbm,
                      xs_ref, sem_ref, n_buffers=n_buffers)
-    xt = xs_ref[jax.lax.rem(i, n_buffers)]
+    xt = xs_ref[stream_slot(i, n_buffers)]
     h = jnp.dot(xt, w1_ref[0], preferred_element_type=jnp.float32)
     u = act_fn(act_name)(h)
     if w1g_ref is not None:

@@ -53,11 +53,11 @@ from ..common import act_fn, round_up
 from . import autotune
 from . import cvmm as cvmm_mod
 from . import ref as refk
-from .cvmm import (FUSIBLE_ACTIVATIONS, LANE, TM, _pick_tn, _RUN_SIZES,
+from .cvmm import (FUSIBLE_ACTIVATIONS, LANE, TM, _RUN_SIZES,
                    cvmm_dw_pallas, cvmm_dw_streamed_pallas,
                    cvmm_fused_w1_pallas, cvmm_fused_w2_pallas,
-                   cvmm_gather_rows_pallas, cvmm_pallas, fused_w1_tn,
-                   gather_tile_fits, streamed_dw_tile)
+                   cvmm_gather_rows_pallas, cvmm_pallas,
+                   gather_tile_fits)
 
 _FORCED_IMPL: Optional[str] = None
 
@@ -218,7 +218,7 @@ def make_moe_plan(idx: jax.Array, gates: jax.Array, n_tokens: int,
                     gate_tiles=gate_pad.reshape(m_pad // TM, TM))
 
 
-def plan_dma_stats(plan, n_rows: int) -> dict:
+def plan_dma_stats(plan, n_rows: int, *, verify: bool = False) -> dict:
     """Telemetry: one plan's gather-DMA descriptor counts — run-batched chunks
     (what each streamed kernel pass issues, ``run_len > 0`` entries) vs the
     retired one-copy-per-row scheme, plus a per-size-class chunk histogram
@@ -230,7 +230,19 @@ def plan_dma_stats(plan, n_rows: int) -> dict:
     PRE-dedup selection count (one DMA per selected (token, slot) — what the
     flat GatherPlan would issue without run luck), so ``batching_factor``
     reports the full dedup+coalescing win; ``unique_rows`` records the
-    post-dedup row count separately."""
+    post-dedup row count separately.
+
+    ``verify=True`` additionally runs the plan through the static invariant
+    oracle (repro.analysis.plans — the same checks CI's analysis gate applies)
+    and raises ``ValueError`` on any violation, so benchmarks and property
+    suites reporting stats on a plan prove its chunk table sound in the same
+    call."""
+    if verify:
+        from ..analysis.plans import verify_plan
+        findings = verify_plan(plan, n_rows)
+        if findings:
+            raise ValueError("plan invariant violations:\n" + "\n".join(
+                f"  [{f.check}] {f.detail}" for f in findings))
     run_len = np.asarray(plan.run_len)
     batched = int((run_len > 0).sum())
     stats = {"chunk_hist": {str(int(s)): int((run_len == s).sum())
@@ -592,9 +604,10 @@ class FusedTiles(NamedTuple):
     t0_tn: int        # backward's gather(dy) @ w2^T streamed GEMM
     w2_tn: int        # w2 gate-epilogue fwd; also dX bwd (same shape key)
     dw_tb: int        # streamed dW blocked-width tile (dW1/dW1g/dW2 share it)
-    w1_nb: int        # gather pipeline depths per streamed kernel
-    t0_nb: int
-    dw_nb: int
+    w1_nb: int        # gather pipeline depths per streamed kernel; every
+    w1_train_nb: int  # launch pairs a width with the depth from the SAME
+    t0_nb: int        # tuner decision — mixing (w1_train_tn, w1_nb) was a
+    dw_nb: int        # combination neither decision proved fits VMEM
     provenance: str   # "heuristic" | "tuned" (any constituent tuned -> tuned)
 
 
@@ -632,8 +645,8 @@ def fused_mlp_tiles(d_model: int, expert_size: int, dtype=jnp.float32,
     return FusedTiles(
         w1_tn=w1i.tiles["tn"], w1_train_tn=w1t.tiles["tn"],
         t0_tn=t0.tiles["tn"], w2_tn=w2.tiles["tn"], dw_tb=dw.tiles["tb"],
-        w1_nb=w1i.tiles["n_buffers"], t0_nb=t0.tiles["n_buffers"],
-        dw_nb=dw.tiles["n_buffers"],
+        w1_nb=w1i.tiles["n_buffers"], w1_train_nb=w1t.tiles["n_buffers"],
+        t0_nb=t0.tiles["n_buffers"], dw_nb=dw.tiles["n_buffers"],
         provenance=_merge_prov(w1i, w1t, t0, w2, dw))
 
 
@@ -809,7 +822,8 @@ def _fused_fwd_impl(static, xf, plan, w1, w1g, w2, save_preact=False):
     w1_tn = w1_nb = w2_tn = None
     if tiles is not None:
         w1_tn = tiles.w1_train_tn if save_preact else tiles.w1_tn
-        w1_nb, w2_tn = tiles.w1_nb, tiles.w2_tn
+        w1_nb = tiles.w1_train_nb if save_preact else tiles.w1_nb
+        w2_tn = tiles.w2_tn
     w1_out = cvmm_fused_w1_pallas(
         xe, plan.row_src, plan.run_start, plan.run_off, plan.tile_expert,
         _pad_w(w1), _pad_w(w1g) if w1g is not None else None,

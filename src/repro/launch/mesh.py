@@ -5,9 +5,20 @@ required because dryrun.py must set XLA_FLAGS before the first jax init.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
+
+# Every mesh axis layout this repo constructs (production, local, tests). The
+# sharding-table analyzer (repro.analysis.sharding) sweeps PARAM_AXES x rule
+# sets against each of these, so a rule that maps two dims of one leaf onto
+# the same mesh axis is caught offline for every layout we can ever run on —
+# not just the one a particular test happens to build. Keep in sync with the
+# constructors below (they assert against this table).
+MESH_AXIS_LAYOUTS: Tuple[Tuple[str, ...], ...] = (
+    ("data", "model"),            # single pod / local default
+    ("pod", "data", "model"),     # multi-pod: leading DCN axis
+)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,7 +31,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     import math
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axes = MESH_AXIS_LAYOUTS[1] if multi_pod else MESH_AXIS_LAYOUTS[0]
     n = math.prod(shape)
     devs = jax.devices()
     if len(devs) == n:
@@ -57,5 +68,5 @@ def make_local_mesh(model: int = 1, pod: int = 1):
             f"sizes whose product divides {n} (divisors: {divisors}).")
     data = n // (model * pod)
     if pod > 1:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
-    return jax.make_mesh((data, model), ("data", "model"))
+        return jax.make_mesh((pod, data, model), MESH_AXIS_LAYOUTS[1])
+    return jax.make_mesh((data, model), MESH_AXIS_LAYOUTS[0])

@@ -21,7 +21,6 @@ import argparse
 import os
 import sys
 import time
-from typing import Optional
 
 
 def tpu_perf_flags() -> str:

@@ -9,14 +9,12 @@ XLA also compiles well (it is the same loop structure the kernel uses).
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import AttentionConfig, ModelConfig
-from ..sharding.logical import with_logical_constraint
 from .layers import apply_rope, rms_norm_simple, sinusoid_positions
 
 

@@ -1,8 +1,7 @@
 """Common neural layers: norms, embeddings, rotary, positional encodings."""
 from __future__ import annotations
 
-import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,16 +11,15 @@ Public step surface (consumed by runtime/ and launch/):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import BlockSpecEntry, ModelConfig, ShapeConfig
 from ..sharding.logical import SP_RULES, with_logical_constraint
-from .layers import apply_norm, dropout, init_embedding, init_norm, sinusoid_positions
-from .stack import (apply_stack, cross_kv_cache, init_mems, init_stack,
+from .layers import apply_norm, dropout, init_embedding, init_norm
+from .stack import (apply_stack, cross_kv_cache, init_stack,
                     init_stack_cache, plan_segments)
 
 

@@ -13,7 +13,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, SSMConfig
+from ..configs.base import ModelConfig
 from .layers import rms_norm_simple
 
 

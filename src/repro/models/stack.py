@@ -15,7 +15,6 @@ arrays} ]}. The same scan drives train, prefill and decode.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 

@@ -5,7 +5,7 @@ the parameter sharding (FSDP shards optimizer state for free under GSPMD).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

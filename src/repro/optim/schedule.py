@@ -2,7 +2,6 @@
 constant, all with linear warmup."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from ..configs.base import OptimizerConfig

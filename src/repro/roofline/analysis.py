@@ -13,10 +13,9 @@ multi-pod dry-run's concern and appear in coll_by_kind.
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Any, Dict, Optional
 
-from .hlo_analysis import HLOCost, analyze_hlo_text
+from .hlo_analysis import analyze_hlo_text
 
 
 @dataclasses.dataclass(frozen=True)

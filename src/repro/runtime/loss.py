@@ -12,7 +12,6 @@ Both are beyond-paper memory optimizations recorded in EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -32,13 +32,12 @@ path (its state is batch-minor); request one or the other.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import OptimizerConfig, TrainConfig
+from ..configs.base import OptimizerConfig
 from ..models.lm import LM
 from ..optim import (adamw_init, adamw_update, clip_by_global_norm, compress_grads,
                      compress_pod_grads, init_compression_state, make_schedule)

@@ -24,9 +24,8 @@ from repro.configs import moe_ffn
 from repro.configs.base import FFNConfig
 from repro.core import (apply_dense, apply_moe, apply_pkm, init_dense,
                         init_moe, init_pkm, pkm_full_scores, pkm_select,
-                        value_sum_path, weighted_value_sum)
+                        value_sum_path)
 from repro.core import dispatch, topk_mlp
-from repro.core.dispatch import Selection
 from repro.kernels import cvmm, ops
 
 D = 32

@@ -2,14 +2,13 @@
 gather->grouped-GEMM->epilogue kernels (interpret mode on CPU) against the
 ``ragged`` / pure-jnp oracles — forward, gradients, empty experts, E-padding,
 and the plan-reuse regression (backward must not re-derive the layout)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import cvmm, ops, ref
+from repro.kernels import cvmm, ops
 
 # (N_tokens, d_model, E, expert_size G, K, n_valid_experts)
 # n_valid < E models EP-padding: experts >= n_valid are never routed to.
@@ -296,30 +295,13 @@ def test_gather_rows_pallas_matches_take():
 
 
 def _replay_runs(plan, n_rows, x):
-    """Numpy re-execution of the plan's DMA chunk table, the way the kernels
-    walk it (one loop per static size class over the run_off boundaries):
-    returns the gathered tile-aligned array and the number of descriptors
-    issued. Cross-checks run_len against the class each entry sits in."""
-    rs = np.asarray(plan.row_src)
-    rst = np.asarray(plan.run_start)
-    rl = np.asarray(plan.run_len)
-    nc = len(cvmm._RUN_SIZES)
-    ro = np.asarray(plan.run_off).reshape(-1, nc + 1)
-    out = np.zeros((plan.m_pad, x.shape[1]), x.dtype)
-    n_dma = 0
-    for t in range(plan.m_pad // ops.TM):
-        assert ro[t, 0] == 0
-        for ci, sz in enumerate(cvmm._RUN_SIZES):
-            for j in range(ro[t, ci], ro[t, ci + 1]):
-                assert int(rl[t * ops.TM + j]) == sz  # class-grouped table
-                off = int(rst[t * ops.TM + j])
-                src = int(rs[t * ops.TM + off])
-                assert src + sz <= n_rows, "chunk overruns the source array"
-                assert off + sz <= ops.TM, "chunk overruns the tile"
-                out[t * ops.TM + off: t * ops.TM + off + sz] = x[src: src + sz]
-                n_dma += 1
-        # entries past the last boundary are unused (run_len == 0)
-        assert (rl[t * ops.TM + ro[t, nc]: (t + 1) * ops.TM] == 0).all()
+    """Chunk-table replay via the shared invariant oracle: this suite used to
+    carry its own numpy re-execution; repro.analysis.plans is now the single
+    source of those checks (CI's analysis gate runs the same code), so the
+    test only asserts the oracle reports the plan clean."""
+    from repro.analysis.plans import replay_chunk_table
+    out, n_dma, findings = replay_chunk_table(plan, n_rows, x)
+    assert findings == [], "\n".join(str(f) for f in findings)
     return out, n_dma
 
 
@@ -553,7 +535,7 @@ def test_fused_mlp_depth3_tiles_match_ragged(glu):
     if not glu:
         w1g = None
     base = ops.fused_mlp_tiles(d, g, xf.dtype, glu=glu)
-    tiles = base._replace(w1_nb=3, t0_nb=3, dw_nb=3)
+    tiles = base._replace(w1_nb=3, w1_train_nb=3, t0_nb=3, dw_nb=3)
 
     def loss_fused(xf, gates, w1, w1g, w2):
         plan = ops.make_moe_plan(idx, gates, n, e)
@@ -574,3 +556,68 @@ def test_fused_mlp_depth3_tiles_match_ragged(glu):
     for a, b in zip(gf, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Boundary grids: fewer row tiles than pipeline buffers. The warmup must not
+# issue tiles past the grid and the drain must still cover every tile — the
+# exact regime the analysis pipeline pass proves symbolically; these runs
+# confirm the proven schedule end-to-end through the real kernels.
+# ---------------------------------------------------------------------------
+
+# (n, d, e, g, k): m_pad/TM = ceil(n*k/TM) + e tiles — 2 tiles for e=1,
+# 3 tiles for e=2, both strictly under the deepest pipeline.
+_BOUNDARY_CASES = [(20, 16, 1, 8, 1), (20, 16, 2, 8, 1)]
+
+
+@pytest.mark.parametrize("n_buffers", [3, 4])
+@pytest.mark.parametrize("case", _BOUNDARY_CASES)
+def test_fused_mlp_boundary_tiles_lt_buffers(case, n_buffers):
+    n, d, e, g, k = case
+    xf, idx, gates, w1, w1g, w2 = _mk((n, d, e, g, k, e), jnp.float32)
+    plan = ops.make_moe_plan(idx, gates, n, e)
+    n_tiles = plan.m_pad // ops.TM
+    if n_tiles >= n_buffers:
+        pytest.skip(f"grid has {n_tiles} tiles, not a boundary at depth "
+                    f"{n_buffers}")
+    base = ops.fused_mlp_tiles(d, g, xf.dtype, glu=True)
+    tiles = base._replace(w1_nb=n_buffers, w1_train_nb=n_buffers,
+                          t0_nb=n_buffers, dw_nb=n_buffers)
+
+    y = ops.moe_mlp_fused(xf, plan, w1, w2, w1g, activation="relu",
+                          interpret=True, tiles=tiles)
+    want = _oracle_mlp(xf, idx, gates, w1, w1g, w2, e, jax.nn.relu)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+    def loss_fused(xf, gates, w1, w1g, w2):
+        p = ops.make_moe_plan(idx, gates, n, e)
+        return ops.moe_mlp_fused(xf, p, w1, w2, w1g, activation="relu",
+                                 interpret=True, tiles=tiles).sum()
+
+    def loss_ref(xf, gates, w1, w1g, w2):
+        return _oracle_mlp(xf, idx, gates, w1, w1g, w2, e, jax.nn.relu).sum()
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2, 3, 4))(xf, gates, w1, w1g, w2)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(xf, gates, w1, w1g, w2)
+    for name, a, b in zip(("dx", "dgates", "dw1", "dw1g", "dw2"), gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("n_buffers", [3, 4])
+def test_gather_rows_single_tile_boundary(n_buffers):
+    """A one-tile gather plan (n*s <= TM) at every deep pipeline: pure warmup
+    + drain, no steady state at all."""
+    n, rows, s = 30, 200, 4
+    key = jax.random.PRNGKey(5)
+    idx = jax.random.randint(key, (n, s), 0, rows)
+    w = jnp.ones((n, s), jnp.float32)
+    plan = ops.make_gather_plan(idx, w, rows)
+    assert plan.row_src.shape[0] == ops.TM          # exactly one tile
+    x = jax.random.normal(key, (rows, 2 * ops.LANE), jnp.float32)
+    got = cvmm.cvmm_gather_rows_pallas(x, plan.row_src, plan.run_start,
+                                       plan.run_off, interpret=True,
+                                       n_buffers=n_buffers)
+    want = jnp.take(x, plan.row_src, axis=0, mode="fill", fill_value=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))

@@ -148,8 +148,7 @@ def test_compress_pod_grads_error_feedback():
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from repro.optim import (compress_pod_grads, init_compression_state,
-                             is_expert_leaf)
+    from repro.optim import compress_pod_grads, init_compression_state
     params = {"blk": {"we1": jnp.ones((4, 8, 16)), "wo": jnp.ones((8, 8))}}
     err = init_compression_state(params, pod=2)
     assert err["blk"]["we1"].shape == (2, 4, 8, 16)
