@@ -1,0 +1,213 @@
+"""Continuous-batching serve benchmark -> ``BENCH_serve.json``.
+
+Drives the real engine (repro.serving) on the reduced granite MoE config
+(sort dispatch, GLU experts, k=2 — the decode-plan provider's target) and
+records the serving signals CI gates on:
+
+* ``plan_rebuilds`` — decode-plan skeleton rebuilds across a >= 32-step
+  steady-state window. The engine's capture-size menu + the shape-keyed
+  skeleton cache mean a warmed engine NEVER rebuilds a plan: the gate pins
+  this to 0, so any change that sneaks per-step plan construction (or a
+  retrace) back into the decode loop fails CI.
+* ``tok_s`` and ``decode_step_us.p50/p99`` — aggregate throughput and
+  per-step decode latency (burst_steps=1, so each sample is one real
+  jitted step including its single host readback).
+* ``prefill_ms`` — mean per-chunk prefill latency (the disaggregation
+  quantum: decode stalls at most this long per scheduling iteration).
+* ``dma_descriptors`` — the decode skeleton's dedup token-gather chunk
+  histogram / unique-row counts and the assembled plan's run-batched
+  descriptor stats, both verified against the plan-invariant oracle in the
+  same call (``verify=True``).
+
+On CPU the pallas kernels run in interpret mode, so absolute tok/s are not
+TPU numbers; the structural signals (rebuilds, descriptor stats) are
+load-independent. Run:  PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+STEADY_STEPS = 32
+
+
+def _requests(cfg, n, prompt_len, max_new, rng):
+    from repro.serving import Request
+    return [Request(rid=f"r{i}",
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        size=prompt_len).tolist(),
+                    max_new=max_new, eos=-1)
+            for i in range(n)]
+
+
+def _decode_plan_report(plan_cache):
+    """DMA/layout telemetry from the cached skeletons (verified against the
+    plan-invariant oracle), plus an assembled-plan invalidation demo."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    skels = [p for p in plan_cache._skeletons.values() if p is not None]
+    if not skels:
+        return {"note": "no decode plans built (provider never served)"}
+    skel = max(skels, key=lambda p: p.n_tokens)
+    gather = ops.plan_dma_stats(skel.gather, skel.n_tokens, verify=True)
+
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, skel.n_experts,
+                                   size=(skel.n_tokens, skel.k)), jnp.int32)
+    gates = jnp.asarray(rng.random((skel.n_tokens, skel.k)), jnp.float32)
+    full = plan_cache.assembled(skel, idx, gates)
+    assembled = ops.plan_dma_stats(full, skel.n_tokens, verify=True)
+    # stable routing -> cache hit; changed routing -> new assembly
+    before = plan_cache.assembles
+    plan_cache.assembled(skel, idx, gates)
+    stable_hit = plan_cache.assembles == before
+    idx2 = (idx + 1) % skel.n_experts
+    plan_cache.assembled(skel, idx2, gates)
+    routing_invalidates = plan_cache.assembles == before + 1
+    return {
+        "shape": {"n_tokens": skel.n_tokens, "k": skel.k,
+                  "n_experts": skel.n_experts, "cap": skel.cap,
+                  "m_pad": skel.m_pad, "w1_tn": skel.w1_tn,
+                  "w2_tn": skel.w2_tn, "provenance": skel.provenance},
+        "dedup_gather": gather,
+        "assembled": assembled,
+        "assembled_cache": {"stable_routing_hit": bool(stable_hit),
+                            "routing_change_invalidates":
+                                bool(routing_invalidates)},
+    }
+
+
+def run(out_path: str = "BENCH_serve.json", quick: bool = True):
+    import jax
+    from repro.configs.archs import reduced
+    from repro.models.lm import LM
+    from repro.serving import Engine
+
+    cfg = reduced("granite-moe-3b-a800m")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    max_batch, prompt_len, max_new = 4, 6, 20
+    burst = 8
+    eng = Engine(lm, params, max_batch=max_batch, max_len=96, page_size=8,
+                 burst_steps=burst, prefill_chunk=8,
+                 prefill_chunks_per_step=2)
+    try:
+        # ---- warmup: compile every (capture, steps) the workload visits and
+        # populate the plan-skeleton cache. Identical request pattern to the
+        # steady-state window, so the window itself is pure cache hits.
+        eng.run(_requests(cfg, max_batch, prompt_len, max_new, rng))
+
+        # ---- steady state: same pattern again; rebuilds must not move.
+        rebuilds0 = eng.plan_cache.rebuilds
+        steps0 = eng.stats["decode_steps"]
+        t0 = time.perf_counter()
+        outs = eng.run(_requests(cfg, max_batch, prompt_len, max_new, rng))
+        wall = time.perf_counter() - t0
+        steady_steps = eng.stats["decode_steps"] - steps0
+        plan_rebuilds = eng.plan_cache.rebuilds - rebuilds0
+        n_tok = sum(len(o) for o in outs.values())
+        tok_s = n_tok / max(wall, 1e-9)
+
+        # ---- per-step decode latency: two always-live lanes, 1-step bursts.
+        lat_steps = 12 if quick else 48
+        for r in _requests(cfg, 2, prompt_len, lat_steps + 8, rng):
+            eng.submit(r)
+        while eng.sched or eng._partial is not None:
+            eng._admit()
+            eng._prefill_one_chunk()
+            if eng._partial.start >= len(eng._partial.req.prompt):
+                eng._finish_prefill()
+        eng.decode_burst(steps=1)              # compile the (cap=2, 1) burst
+        lat_us = []
+        for _ in range(lat_steps):
+            t0 = time.perf_counter()
+            eng.decode_burst(steps=1)          # includes the host readback
+            lat_us.append((time.perf_counter() - t0) * 1e6)
+        while eng.has_work():                  # drain the latency lanes
+            eng.step()
+
+        # ---- prefill chunk latency (the disaggregation quantum)
+        pre = _requests(cfg, 1, prompt_len, 2, rng)[0]
+        eng.submit(pre)
+        eng._admit()
+        t0 = time.perf_counter()
+        eng._prefill_one_chunk()
+        jax.block_until_ready(eng._partial.logits)
+        prefill_ms = (time.perf_counter() - t0) * 1e3
+        eng._finish_prefill()
+        while eng.has_work():
+            eng.step()
+
+        plan_counters = eng.plan_cache.counters()
+        plan_report = _decode_plan_report(eng.plan_cache)
+    finally:
+        eng.close()
+
+    payload = {
+        "config": {"arch": cfg.name, "backend": jax.default_backend(),
+                   "max_batch": max_batch, "prompt_len": prompt_len,
+                   "max_new": max_new, "burst_steps": burst,
+                   "page_size": 8, "prefill_chunk": 8,
+                   "capture_sizes": list(eng.capture_sizes),
+                   "note": "pallas kernels run in interpret mode off-TPU"},
+        "throughput": {"tok_s": round(tok_s, 2), "tokens": n_tok,
+                       "wall_s": round(wall, 4)},
+        "decode_step_us": {"p50": round(float(np.percentile(lat_us, 50)), 1),
+                           "p99": round(float(np.percentile(lat_us, 99)), 1),
+                           "n": len(lat_us)},
+        "prefill_ms": round(prefill_ms, 3),
+        "plan_rebuilds": plan_rebuilds,
+        "steady_steps": steady_steps,
+        "plan_cache": plan_counters,
+        "engine_stats": eng.stats,
+        "decode_plan": plan_report,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+
+    if steady_steps < STEADY_STEPS:
+        raise AssertionError(
+            f"steady-state window too short: {steady_steps} < {STEADY_STEPS}")
+    if plan_rebuilds != 0:
+        raise AssertionError(
+            f"{plan_rebuilds} decode-plan rebuilds at steady state (want 0)")
+
+    dd = payload["decode_plan"].get("dedup_gather", {})
+    rows = [
+        f"serve/tok_s,{payload['decode_step_us']['p50']},"
+        f"tok_s={payload['throughput']['tok_s']};"
+        f"tokens={n_tok};wall_s={payload['throughput']['wall_s']}",
+        f"serve/decode_step,{payload['decode_step_us']['p50']},"
+        f"p99={payload['decode_step_us']['p99']};n={len(lat_us)}",
+        f"serve/prefill_chunk,{prefill_ms * 1e3:.1f},ms={prefill_ms}",
+        f"serve/steady,{steady_steps},plan_rebuilds={plan_rebuilds};"
+        f"plan_cache={plan_counters}",
+    ]
+    if dd:
+        rows.append(
+            f"serve/decode_dma,{dd['run_batched']},"
+            f"batching_factor={dd['batching_factor']};"
+            f"unique_rows={dd['unique_rows']};per_row={dd['per_row']}")
+    rows.append(f"# wrote {out_path}; steady {steady_steps} steps with "
+                f"{plan_rebuilds} plan rebuilds; "
+                f"{payload['throughput']['tok_s']} tok/s")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for row in run(args.out, quick=not args.full):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

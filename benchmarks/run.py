@@ -20,7 +20,7 @@ import argparse
 import sys
 import time
 
-QUICK = ("cvmm", "fig2")
+QUICK = ("cvmm", "fig2", "serve")
 
 
 def main() -> None:
@@ -41,11 +41,12 @@ def main() -> None:
         autotune.enable(True)
         print(f"# autotune on: cache={autotune.cache_path()}", flush=True)
 
-    from . import (bench_cvmm, fig1_active_channels, fig2_exec_time,
-                   fig3_expert_usage, table1_topk, table2_pkm,
-                   table3_sigma_moe, table4_ablations)
+    from . import (bench_cvmm, bench_serve, fig1_active_channels,
+                   fig2_exec_time, fig3_expert_usage, table1_topk,
+                   table2_pkm, table3_sigma_moe, table4_ablations)
     mods = {
         "cvmm": lambda: bench_cvmm.run(iters=3 if args.quick else 10),
+        "serve": lambda: bench_serve.run(quick=args.quick),
         "table1": lambda: table1_topk.run(args.steps),
         "table2": lambda: table2_pkm.run(args.steps),
         "table3": lambda: table3_sigma_moe.run(max(args.steps, 150)),

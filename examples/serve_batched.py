@@ -1,5 +1,10 @@
-"""Batched serving: prefill a batch of prompts, then step a shared decode loop with
-per-request completion tracking (continuous-batching lite).
+"""Batched serving through the continuous-batching engine (repro.serving).
+
+Requests with different prompt lengths and generation budgets join and
+leave the decode batch mid-flight; EOS/length termination is decided on
+device inside jitted decode bursts (no per-step host sync, one readback
+per burst), and the KV cache is paged so join/evict never reshapes device
+state.
 
     PYTHONPATH=src python examples/serve_batched.py --arch llama3-8b --reduced
 """
@@ -7,11 +12,11 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import build_model
+from repro.serving import Engine, Request
 
 
 def main():
@@ -21,56 +26,38 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--burst-steps", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    b, p_len = args.batch, args.prompt_len
-    max_len = p_len + args.max_new
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, p_len), 0,
-                                 cfg.vocab_size)
-
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-
-    cache = model.init_cache(b, max_len)
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, {"tokens": prompts}, cache)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
+    rng = np.random.default_rng(1)
     eos = 0   # pretend token 0 is EOS
-    done = np.zeros(b, bool)
-    outs = [[] for _ in range(b)]
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    t0 = time.perf_counter()
-    steps = 0
-    for i in range(args.max_new):
-        for j in range(b):
-            if not done[j]:
-                outs[j].append(int(tok[j]))
-                if int(tok[j]) == eos:
-                    done[j] = True
-        if done.all():
-            break
-        logits, cache = decode(params, cache, tok, jnp.int32(p_len + i))
-        if args.temperature > 0:
-            logits = logits / args.temperature
-            tok = jax.random.categorical(jax.random.fold_in(
-                jax.random.PRNGKey(2), i), logits).astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        steps += 1
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} prefill {t_prefill*1e3:.1f}ms; "
-          f"{steps} decode steps @ {dt/max(steps,1)*1e3:.1f} ms/step "
-          f"({b*steps/max(dt,1e-9):.1f} tok/s aggregate)")
-    for j, o in enumerate(outs):
-        print(f"req{j}: {o}")
+    reqs = []
+    for j in range(args.batch):
+        p_len = int(rng.integers(max(2, args.prompt_len // 2),
+                                 args.prompt_len + 1))
+        prompt = rng.integers(1, cfg.vocab_size, size=p_len).tolist()
+        reqs.append(Request(rid=f"req{j}", prompt=prompt,
+                            max_new=args.max_new, eos=eos))
+
+    max_len = args.prompt_len + args.max_new
+    with Engine(model, params, max_batch=args.batch, max_len=max_len,
+                page_size=args.page_size, burst_steps=args.burst_steps) as eng:
+        t0 = time.perf_counter()
+        outs = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(o) for o in outs.values())
+        print(f"arch={cfg.name} {n_tok} tokens in {dt*1e3:.1f}ms "
+              f"({n_tok/max(dt, 1e-9):.1f} tok/s aggregate); "
+              f"stats={eng.stats}")
+        if eng.plan_cache is not None:
+            print(f"decode-plan cache: {eng.plan_cache.counters()}")
+    for j in range(args.batch):
+        print(f"req{j}: {outs[f'req{j}']}")
 
 
 if __name__ == "__main__":

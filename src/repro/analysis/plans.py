@@ -290,6 +290,14 @@ _GATHER_CASES = (
     ("gather-subtile", 3, 50, 2),
 )
 _EP_CASES = ((2, 256), (4, 128), (1, 384), (3, 64))
+# (name, n_tokens, k, n_experts, d_model, expert_size) — the serving decode
+# shape classes: tiny-M batches whose cached skeletons the engine reuses
+_DECODE_CASES = (
+    ("decode-b4", 4, 2, 4, 64, 32),
+    ("decode-b8", 8, 2, 4, 64, 32),
+    ("decode-b1-k1", 1, 1, 2, 64, 32),
+    ("decode-b2-e8", 2, 2, 8, 128, 64),
+)
 
 
 def check_plans() -> Tuple[List[Finding], int]:
@@ -359,4 +367,56 @@ def check_plans() -> Tuple[List[Finding], int]:
         findings += verify_plan(plan, e_local * cap_g,
                                 f"ep e_local={e_local} cap_g={cap_g}")
         checks += 10
+
+    # Decode skeletons: the routing-free layout must assemble into a plan
+    # that passes the SAME oracle as every per-call plan, for any routing —
+    # otherwise the engine's cached-skeleton shortcut could drift silently.
+    for name, n, k, e, d_model, esz in _DECODE_CASES:
+        skel = ops.make_decode_plan(n, k, e, d_model, esz)
+        if skel is None:
+            findings.append(_bad(
+                "decode-no-tile", name,
+                f"no fitting tile for n={n} k={k} e={e} d={d_model} "
+                f"g={esz} — the decode shape classes must stay servable"))
+            continue
+        # the skeleton's dedup token gather is a plan in its own right
+        findings += verify_plan(skel.gather, n, f"{name}/gather")
+        te_want = np.repeat(np.arange(e, dtype=np.int32), skel.cap // TM)
+        if not np.array_equal(np.asarray(skel.tile_expert), te_want):
+            findings.append(_bad(
+                "decode-tile-expert", name,
+                "skeleton tile_expert != repeat(arange(e), cap//TM) — the "
+                "static expert layout is what makes the cache routing-free"))
+        checks += 11
+        idx = rng.randint(0, e, size=(n, k)).astype(np.int32)
+        gates = rng.rand(n, k).astype(np.float32)
+        full = ops.assemble_decode_plan(skel, jnp.asarray(idx),
+                                        jnp.asarray(gates))
+        findings += verify_plan(full, n, name)
+        perm = np.asarray(full.perm)
+        new_pos = np.asarray(full.new_pos)
+        tok = np.repeat(np.arange(n, dtype=np.int32), k)
+        if not np.array_equal(np.asarray(full.row_src)[new_pos], tok[perm]):
+            findings.append(_bad(
+                "routing-mismatch", name,
+                "assembled row_src[new_pos] != token of the sorted selection"))
+        gexp = np.zeros((full.m_pad,), np.float32)
+        gexp[new_pos] = gates.reshape(-1)[perm]
+        if not np.allclose(np.asarray(full.gate_tiles).reshape(-1), gexp):
+            findings.append(_bad(
+                "gate-mismatch", name,
+                "assembled gate_tiles disagree with the routed gate values"))
+        if not np.array_equal(np.asarray(full.tile_expert),
+                              np.asarray(skel.tile_expert)):
+            findings.append(_bad(
+                "decode-tile-drift", name,
+                "assembled plan's tile_expert differs from the skeleton's — "
+                "the cached GEMM layout would not match the materialized one"))
+        slots = np.asarray(ops.decode_slots(skel, jnp.asarray(idx)))
+        if not np.array_equal(np.sort(new_pos), np.sort(slots)):
+            findings.append(_bad(
+                "decode-slot-mismatch", name,
+                "decode_slots() and the assembled new_pos place selections "
+                "in different padded rows"))
+        checks += 14
     return findings, checks

@@ -60,9 +60,12 @@ def launch_inventory(family: str, dims: Dict[str, int],
     Derived from the pallas_call scratch_shapes and BlockSpec block shapes,
     NOT from the tuner's formulas — the drift check compares the two."""
     b = dims["b"]
-    if family == "pick_tn":
+    if family in ("pick_tn", "decode_gemm"):
         # cvmm_pallas / cvmm_fused_w2_pallas: x block (TM, K), weight block
-        # (1, K, tn), f32 accumulator-sized output block (TM, tn).
+        # (1, K, tn), f32 accumulator-sized output block (TM, tn). The
+        # decode_gemm shape-class launches the SAME kernel (ops.DecodePlan's
+        # grouped GEMMs), so the per-step inventory is identical — only the
+        # cost model and reference pass differ.
         k, tn = dims["k_pad"], tiles["tn"]
         return [("x block (TM,K)", TM * k * b),
                 ("w block (1,K,tn)", k * tn * b),
@@ -105,7 +108,7 @@ def tuner_bytes(family: str, dims: Dict[str, int],
                 tiles: Dict[str, int]) -> int:
     """The tuner's own closed-form working set for the same launch."""
     b = dims["b"]
-    if family == "pick_tn":
+    if family in ("pick_tn", "decode_gemm"):
         return autotune.ws_matmul_tile(dims["k_pad"], tiles["tn"], b)
     if family == "fused_w1":
         return autotune.ws_fused_w1(dims["k_pad"], tiles["tn"], b,
@@ -129,6 +132,13 @@ def _dims_grid(family: str):
         return [{"k_pad": k, "n_pad": n, "b": b}
                 for k in (128, 512, 1024, 4096) for n in _WIDTHS
                 for b in (2, 4)]
+    if family == "decode_gemm":
+        # Decode GEMMs key on (d_pad, g_pad) pairs of real expert MLPs — a
+        # smaller grid than pick_tn's training sweep, but both orientations
+        # (w1: d->g, w2: g->d) of each shape are covered.
+        return [{"k_pad": k, "n_pad": n, "b": b}
+                for k in (128, 512, 1024) for n in (128, 512, 640, 1024)
+                for b in (2, 4)]
     if family == "fused_w1":
         return [{"k_pad": k, "n_pad": n, "b": b, "n_weights": nw,
                  "n_out": no}
@@ -149,7 +159,7 @@ def _width_key(family: str) -> str:
 def _min_tiles(family: str, dims: Dict[str, int]) -> Dict[str, int]:
     """The smallest candidate the enumerator could ever offer."""
     t = {"tm": TM, _width_key(family): LANE, "n_buffers": 2}
-    if family == "pick_tn":
+    if family in ("pick_tn", "decode_gemm"):
         del t["n_buffers"]
     if family in ("gather", "gather_dedup"):
         del t[_width_key(family)]

@@ -479,6 +479,24 @@ def _shard_map_path(params: Dict, xf: jax.Array, cfg: FFNConfig,
     return y, dropped
 
 
+# Serving-layer decode fast path. The engine (repro.serving) installs a
+# provider around its inference traces; when it claims a call (tiny-M
+# decode/prefill-chunk shapes, "sort" dispatch) the expert MLP executes on a
+# cached routing-free DecodePlan skeleton (kernels/ops.moe_mlp_decode)
+# instead of rebuilding a CvmmPlan per step. The provider returns None to
+# decline (wrong shape, no fitting tile, mesh active) and the normal chain
+# runs. Forward-only: providers must never be left installed around
+# training traces — install/uninstall via serving.Engine (context-managed).
+_DECODE_PROVIDER = None
+
+
+def set_decode_provider(fn) -> None:
+    """Install (or with ``None`` remove) the decode fast-path provider:
+    ``fn(params, xf, cfg, info, e) -> Optional[y]``."""
+    global _DECODE_PROVIDER
+    _DECODE_PROVIDER = fn
+
+
 def expert_mlp(params: Dict, xf: jax.Array, cfg: FFNConfig,
                info: SelectionInfo, e: int) -> Tuple[jax.Array, jax.Array]:
     """Planned execution of one MoE layer's expert MLP at a fixed selection.
@@ -488,6 +506,10 @@ def expert_mlp(params: Dict, xf: jax.Array, cfg: FFNConfig,
     "shard_map" = explicit all_to_all EP); the kernel chain within "sort" is
     resolved here (resolve_impl + capability gates), not by the caller."""
     if cfg.dispatch == "sort":
+        if _DECODE_PROVIDER is not None:
+            y = _DECODE_PROVIDER(params, xf, cfg, info, e)
+            if y is not None:
+                return y, jnp.float32(0.0)  # dropless, same as _sort_path
         return _sort_path(params, xf, cfg, info, e), jnp.float32(0.0)
     if cfg.dispatch == "shard_map":
         return _shard_map_path(params, xf, cfg, info, e)

@@ -86,6 +86,7 @@ STEP_OVERHEAD_S = 2e-6        # fixed per-grid-step cost in the roofline model
 # new depth added here is automatically swept by both passes.
 FAMILY_DEPTHS: Dict[str, tuple] = {
     "pick_tn": (),                # blocked GEMM: no gather stream
+    "decode_gemm": (),            # same kernel, decode (tiny-M) shape-class
     "fused_w1": (2, 3),
     "streamed_dw": (2, 3),
     "gather": (2, 3, 4),          # bare gather is DMA-bound: depth 4 can pay
@@ -235,6 +236,22 @@ def _cost_pick_tn(dims, tiles, hw):
         + steps * STEP_OVERHEAD_S
 
 
+def _cost_decode_gemm(dims, tiles, hw):
+    """Decode shape-class: ONE live row tile (a continuous-batching decode
+    step routes at most a few hundred rows), so the pass is weight-stream
+    bound — the full (K, N) weight panel moves through VMEM for a single
+    (TM, K) operand tile and per-step overhead dominates the ranking."""
+    k_pad, n_pad, b = dims["k_pad"], dims["n_pad"], dims["b"]
+    tn = tiles["tn"]
+    steps = n_pad // tn
+    bytes_moved = (k_pad * n_pad * b      # the whole weight panel, once
+                   + TM * k_pad * b       # one operand tile
+                   + TM * n_pad * b)      # one output stripe
+    flops = 2 * TM * k_pad * n_pad
+    return max(bytes_moved / hw.hbm_bw, flops / hw.peak_flops) \
+        + steps * STEP_OVERHEAD_S
+
+
 def _cand_fused_w1(dims, budget):
     k_pad, b = dims["k_pad"], dims["b"]
     nw, no = dims["n_weights"], dims["n_out"]
@@ -374,6 +391,19 @@ def _bench_pick_tn(dims, tiles) -> float:
     return _time_us(lambda: f(x, te, w))
 
 
+def _bench_decode_gemm(dims, tiles) -> float:
+    import jax
+    import jax.numpy as jnp
+    from . import cvmm
+    dt = _bench_dtype(dims["b"])
+    x = jnp.ones((TM, dims["k_pad"]), dt)         # one row tile: decode-sized
+    te = jnp.zeros((1,), jnp.int32)
+    w = jnp.ones((1, dims["k_pad"], dims["n_pad"]), dt)
+    f = jax.jit(functools.partial(cvmm.cvmm_pallas, interpret=_interpret(),
+                                  tn=tiles["tn"]))
+    return _time_us(lambda: f(x, te, w))
+
+
 def _bench_fused_w1(dims, tiles) -> float:
     import jax
     import jax.numpy as jnp
@@ -463,6 +493,13 @@ class _Family(NamedTuple):
 
 _FAMILIES: Dict[str, _Family] = {
     "pick_tn": _Family(_cand_pick_tn, _cost_pick_tn, _bench_pick_tn, "dense"),
+    # Same blocked-GEMM kernel + candidate set as "pick_tn", but costed and
+    # measured at ONE row tile — the continuous-batching decode step's tiny-M
+    # regime, where training-amortized tile choices stop being representative.
+    # A separate shape-class keeps tuned decode winners from overwriting the
+    # 24k-token training winners (and vice versa).
+    "decode_gemm": _Family(_cand_pick_tn, _cost_decode_gemm,
+                           _bench_decode_gemm, "decode"),
     "fused_w1": _Family(_cand_fused_w1, _cost_fused_w1, _bench_fused_w1,
                         "mixed"),
     "streamed_dw": _Family(_cand_streamed_dw, _cost_streamed_dw,
@@ -638,6 +675,15 @@ def pick_tn(k_pad: int, n_pad: int, bytes_per_el: int, *,
     d = decide("pick_tn", {"k_pad": k_pad, "n_pad": n_pad, "b": bytes_per_el},
                budget=budget)
     return None if d.tiles is None else d.tiles["tn"]
+
+
+def decode_gemm_tiles(k_pad: int, n_pad: int, bytes_per_el: int, *,
+                      budget: Optional[int] = None) -> TileDecision:
+    """Tile width for the decode-shaped grouped GEMM (ops.DecodePlan): same
+    kernel and candidates as ``pick_tn``, separate shape-class so decode
+    winners are tuned at tiny-M instead of inheriting training tiles."""
+    return decide("decode_gemm", {"k_pad": k_pad, "n_pad": n_pad,
+                                  "b": bytes_per_el}, budget=budget)
 
 
 def fused_w1_tiles(k_pad: int, n_pad: int, bytes_per_el: int, n_weights: int,

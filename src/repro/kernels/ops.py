@@ -988,3 +988,188 @@ def cvmm(x: jax.Array, group_sizes: jax.Array, w: jax.Array,
                              planned_call_tiles(x.shape[1], w.shape[2],
                                                 x.dtype))
     raise ValueError(f"unknown cvmm impl {impl}")
+
+
+# ---------------------------------------------------------------------------
+# Decode-shaped planned CVMM (serving: tiny-M steps on a cached skeleton)
+# ---------------------------------------------------------------------------
+# A continuous-batching decode step routes a handful of rows (one token per
+# in-flight request, K=1-2), so rebuilding a full ``make_moe_plan`` —
+# argsort, tile layout, chunk-table derivation — every token is pure
+# overhead: at fixed (n_tokens, k, e, d, g) the expensive pieces of the plan
+# do not depend on the routing at all. ``DecodePlan`` is that routing-free
+# skeleton, built once per decode shape class and cached by the serving
+# layer (serving/decode_plan.DecodePlanCache); the only per-step work is
+# ``decode_slots`` — a one-hot rank giving each selection its slot inside a
+# dropless per-expert capacity region — which is a few tiny XLA ops inside
+# the jitted step, not a plan rebuild.
+
+class DecodePlan(NamedTuple):
+    """Routing-free layout skeleton for one decode shape class.
+
+    The per-expert capacity is the dropless worst case ``cap =
+    round_up(n_tokens*k, TM)`` (every selection could route to one expert),
+    so the padded row space is ``m_pad = n_experts * cap`` and
+    ``tile_expert`` is the STATIC ``repeat(arange(e), cap//TM)`` — expert
+    boundaries never move with the routing, which is what lets the grouped
+    GEMMs launch against a cached layout. ``gather`` is the decode-shaped
+    dedup plan over TOKEN rows (row_src == arange(n_tokens)): each token's
+    activation row streams HBM->VMEM once and the K-way expansion happens
+    through the plan's ``sel_pos`` indirection, not K duplicate row DMAs.
+    ``w1_tn``/``w2_tn`` come from the tuner's "decode_gemm" shape class —
+    tile decisions costed at ONE row tile instead of a training pass.
+    Execution is forward-only (inference); grads never flow through it."""
+    n_tokens: int
+    k: int
+    n_experts: int
+    cap: int                     # per-expert slot capacity (TM multiple)
+    tile_expert: jax.Array       # (n_experts * cap // TM,) static layout
+    gather: DedupGatherPlan      # token-row dedup gather (row_src = arange)
+    gather_nb: Optional[int]     # pipeline depth for the gather kernel
+    w1_tn: int                   # decode_gemm tile widths (w1: d->g, w2: g->d)
+    w2_tn: int
+    provenance: str
+
+    @property
+    def m_pad(self) -> int:
+        return self.n_experts * self.cap
+
+
+def make_decode_plan(n_tokens: int, k: int, n_experts: int, d_model: int,
+                     expert_size: int,
+                     dtype=jnp.float32) -> Optional[DecodePlan]:
+    """Build the routing-free decode skeleton for one shape class, or None
+    when some launch has no fitting tile (callers fall back to the per-call
+    ``make_moe_plan`` path). Reads ``cvmm.VMEM_BUDGET`` at call time."""
+    b = jnp.dtype(dtype).itemsize
+    d_pad = round_up(d_model, LANE)
+    g_pad = round_up(expert_size, LANE)
+    budget = cvmm_mod.VMEM_BUDGET
+    w1 = autotune.decode_gemm_tiles(d_pad, g_pad, b, budget=budget)
+    w2 = autotune.decode_gemm_tiles(g_pad, d_pad, b, budget=budget)
+    gnb = autotune.dedup_gather_tiles(d_pad, b, budget=budget)
+    if w1.tiles is None or w2.tiles is None:
+        return None
+    cap = round_up(n_tokens * k, TM)
+    tile_expert = jnp.repeat(jnp.arange(n_experts, dtype=jnp.int32),
+                             cap // TM)
+    tok = jnp.broadcast_to(jnp.arange(n_tokens, dtype=jnp.int32)[:, None],
+                           (n_tokens, k))
+    gather = make_dedup_gather_plan(tok, jnp.ones((n_tokens, k), jnp.float32),
+                                    n_tokens)
+    return DecodePlan(
+        n_tokens=n_tokens, k=k, n_experts=n_experts, cap=cap,
+        tile_expert=tile_expert, gather=gather,
+        gather_nb=None if gnb.tiles is None else gnb.tiles["n_buffers"],
+        w1_tn=w1.tiles["tn"], w2_tn=w2.tiles["tn"],
+        provenance=_merge_prov(w1, w2))
+
+
+def decode_slots(plan: DecodePlan, idx: jax.Array) -> jax.Array:
+    """The per-step incremental plan update: flat selection -> padded slot.
+
+    A cumulative one-hot rank orders each selection within its expert;
+    ``slot = expert*cap + rank`` lands it in the expert's static capacity
+    region. Dropless by construction (rank < n*k <= cap), injective (ranks
+    are distinct per expert), and a few tiny ops at decode M — this is ALL
+    the per-step work the cached skeleton leaves."""
+    e_flat = idx.reshape(-1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(e_flat, plan.n_experts, dtype=jnp.int32)
+    rank = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1
+    return e_flat * plan.cap + rank
+
+
+def dedup_gather_rows(values: jax.Array, plan: DedupGatherPlan, *,
+                      interpret: Optional[bool] = None,
+                      n_buffers: Optional[int] = None) -> jax.Array:
+    """Per-selection row gather through a dedup plan: rows[s] = V[idx[s]].
+
+    The streamed pass covers the plan's compacted union once (shared rows
+    one DMA) and the (M,)-index ``sel_pos`` take expands back to selection
+    order — ``gathered_weighted_sum_dedup`` without the weight/scatter
+    epilogue, for callers that need the rows themselves (the decode MoE
+    path scatters them into expert-capacity slots instead of summing).
+    Forward-only: no custom_vjp, grads do not flow through it."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if n_buffers is None:
+        dec = autotune.dedup_gather_tiles(round_up(values.shape[-1], LANE),
+                                          jnp.dtype(values.dtype).itemsize,
+                                          budget=cvmm_mod.VMEM_BUDGET)
+        n_buffers = dec.tiles["n_buffers"] if dec.tiles is not None else None
+    rows = cvmm_gather_rows_pallas(_pad_lane(values, 1), plan.row_src,
+                                   plan.run_start, plan.run_off,
+                                   interpret=interpret, n_buffers=n_buffers)
+    return jnp.take(rows, plan.sel_pos, axis=0)
+
+
+def moe_mlp_decode(xf: jax.Array, idx: jax.Array, gates: jax.Array,
+                   plan: DecodePlan, w1: jax.Array, w2: jax.Array,
+                   w1g: Optional[jax.Array] = None, *,
+                   activation: str = "relu",
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Decode-shaped MoE MLP on a cached skeleton: y[t] = sum_k g[t,k] *
+    w2[e]^T act(w1[e]^T x[t]) without any per-step plan rebuild.
+
+    xf (n, d) tokens, idx/gates (n, k) routing. Token rows stream once
+    through the skeleton's dedup gather, scatter into the static
+    expert-capacity layout, run the two grouped GEMMs at the decode-tuned
+    tile widths, and combine back with the gates. Matches the sort path's
+    math exactly (dropless). Forward-only — serving installs it via
+    ``core.dispatch.set_decode_provider`` for inference traces only."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = xf.shape
+    assert n == plan.n_tokens and idx.shape == (n, plan.k)
+    d_pad = round_up(d, LANE)
+    x_rows = dedup_gather_rows(xf, plan.gather, interpret=interpret,
+                               n_buffers=plan.gather_nb)      # (n*k, d_pad)
+    slot = decode_slots(plan, idx)
+    x_pad = jnp.zeros((plan.m_pad, d_pad), xf.dtype).at[slot].set(x_rows)
+    h = cvmm_pallas(x_pad, plan.tile_expert, _pad_w(w1.astype(xf.dtype)),
+                    interpret=interpret, tn=plan.w1_tn)
+    # Activation at the XLA level; padded weight columns are zero, so acting
+    # on them is harmless (w2's padded K rows are zero either way).
+    u = act_fn(activation)(h)
+    if w1g is not None:
+        hg = cvmm_pallas(x_pad, plan.tile_expert,
+                         _pad_w(w1g.astype(xf.dtype)),
+                         interpret=interpret, tn=plan.w1_tn)
+        u = u * hg
+    y_pad = cvmm_pallas(u.astype(xf.dtype), plan.tile_expert,
+                        _pad_w(w2.astype(xf.dtype)),
+                        interpret=interpret, tn=plan.w2_tn)
+    g_flat = gates.reshape(-1).astype(jnp.float32)
+    rows = y_pad[slot].astype(jnp.float32) * g_flat[:, None]  # (n*k, d_pad)
+    y = jnp.zeros((n, d_pad), jnp.float32).at[plan.gather.tok_src].add(rows)
+    return y[:, :d].astype(xf.dtype)
+
+
+def assemble_decode_plan(plan: DecodePlan, idx: jax.Array,
+                         gates: jax.Array) -> CvmmPlan:
+    """Materialize the full ``CvmmPlan`` the skeleton + one routing imply.
+
+    The hot path never needs this — ``moe_mlp_decode`` runs straight off the
+    skeleton — but the analysis plans pass and the serve bench verify the
+    decode layout against the SAME invariant oracle as every other plan
+    (tile purity, slot injection, chunk-table replay), so the cached-
+    skeleton shortcut can never drift from the contract silently. Slots
+    follow ``decode_slots``; the chunk table is derived from the scattered
+    ``row_src`` exactly as ``make_moe_plan`` would."""
+    k = idx.shape[-1]
+    e_flat = idx.reshape(-1).astype(jnp.int32)
+    g_flat = gates.reshape(-1)
+    tok = jnp.repeat(jnp.arange(plan.n_tokens, dtype=jnp.int32), k)
+    perm = jnp.argsort(e_flat, stable=True)
+    group_sizes = jnp.bincount(e_flat,
+                               length=plan.n_experts).astype(jnp.int32)
+    new_pos = decode_slots(plan, idx)[perm]
+    row_src = jnp.full((plan.m_pad,), plan.n_tokens,
+                       jnp.int32).at[new_pos].set(tok[perm])
+    run_start, run_len, run_off = _plan_runs(row_src, plan.n_tokens)
+    gate_pad = jnp.zeros((plan.m_pad,), jnp.float32).at[new_pos].set(
+        g_flat[perm].astype(jnp.float32))
+    return CvmmPlan(perm=perm, group_sizes=group_sizes, new_pos=new_pos,
+                    row_src=row_src, run_start=run_start, run_len=run_len,
+                    run_off=run_off, tile_expert=plan.tile_expert,
+                    gate_tiles=gate_pad.reshape(plan.m_pad // TM, TM))

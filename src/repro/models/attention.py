@@ -133,6 +133,8 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     q (B,1,H,D), k/v (B,Smax,KV,D). The (B,H,Smax) score tensor is small at decode,
     so no online softmax is needed; XLA SPMD reduces over a sharded Smax with a psum,
     which is what makes a sequence-sharded KV cache work for the long_500k shape.
+    q_pos may be a scalar (lockstep decode) or (B,) per-request positions
+    (continuous batching: each lane sits at its own depth).
     """
     b, _, h, dh = q.shape
     smax, kvh = k.shape[1], k.shape[2]
@@ -145,14 +147,80 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if kv_len is not None:
         mask = pos[None, :] < kv_len[:, None]               # (B, Smax)
     if window:
-        wmask = pos > q_pos - window
-        mask = mask & wmask[None, :] if mask.ndim == 2 else (mask & wmask)
+        qp = jnp.asarray(q_pos, jnp.int32).reshape(-1)      # scalar or (B,)
+        wmask = pos[None, :] > qp[:, None] - window         # (1 or B, Smax)
+        mask = (mask if mask.ndim == 2 else mask[None, :]) & wmask
     if mask.ndim == 1:
         mask = mask[None, :]
     s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
     return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged (block) KV cache — serving's continuous-batching layout
+# ---------------------------------------------------------------------------
+
+def paged_attend(q: jax.Array, k: jax.Array, v: jax.Array, cache: Dict,
+                 block_table: jax.Array, cache_index, seq_lens, *,
+                 scale: float, window: int = 0,
+                 kv_chunk: int = 2048) -> Tuple[jax.Array, Dict]:
+    """Attention against a paged KV pool (see serving/__init__ for the full
+    block-table/KV-page contract).
+
+    cache: {"k": (P, ps, KV, D), "v": ...} — a pool of P fixed-size pages
+    shared by all requests; page 0 is the reserved null/scratch page.
+    block_table (B, n_blocks) maps each request's logical page j to its
+    physical page id (0 = unallocated). Two modes:
+
+    decode (Sq == 1): ``cache_index`` is the (B,) absolute write position of
+    each lane's token; the new K/V scatters into (page, offset) slots and
+    attention runs over the request's gathered pages with per-lane
+    ``kv_len = pos + 1`` masking (scratch-page garbage beyond a lane's
+    length is masked out, not read around).
+
+    prefill chunk (Sq > 1, B == 1): ``cache_index`` is the scalar absolute
+    start of this chunk and ``seq_lens`` the (1,) valid token count within
+    it — padded chunk tail tokens target page id P, which is out of bounds,
+    so their writes DROP; their attention rows compute garbage the caller
+    discards (the engine reads logits at length-1 only).
+    """
+    b, sq = q.shape[0], q.shape[1]
+    n_pages, ps = cache["k"].shape[0], cache["k"].shape[1]
+    cdt = cache["k"].dtype
+    if sq == 1:
+        pos = jnp.asarray(cache_index, jnp.int32)               # (B,)
+        page = jnp.take_along_axis(block_table, (pos // ps)[:, None],
+                                   axis=1)[:, 0]
+        off = pos % ps
+        ck = cache["k"].at[page, off].set(k[:, 0].astype(cdt))
+        cv = cache["v"].at[page, off].set(v[:, 0].astype(cdt))
+        gk = ck[block_table].reshape(b, -1, *ck.shape[2:])
+        gv = cv[block_table].reshape(b, -1, *cv.shape[2:])
+        out = decode_attention(q, gk.astype(q.dtype), gv.astype(q.dtype),
+                               scale=scale, q_pos=pos, window=window,
+                               kv_len=pos + 1)
+    else:
+        if b != 1:
+            raise NotImplementedError("paged prefill runs one request per "
+                                      "chunk (B == 1)")
+        start = jnp.asarray(cache_index, jnp.int32)             # scalar
+        length = jnp.asarray(seq_lens, jnp.int32).reshape(-1)[0]
+        pos = start + jnp.arange(sq)
+        valid = jnp.arange(sq) < length
+        lpage = jnp.minimum(pos // ps, block_table.shape[1] - 1)
+        page = jnp.where(valid, block_table[0][lpage], n_pages)  # OOB: drop
+        off = pos % ps
+        ck = cache["k"].at[page, off].set(k[0].astype(cdt), mode="drop")
+        cv = cache["v"].at[page, off].set(v[0].astype(cdt), mode="drop")
+        gk = ck[block_table[0]].reshape(1, -1, *ck.shape[2:])
+        gv = cv[block_table[0]].reshape(1, -1, *cv.shape[2:])
+        out = flash_attention(q, gk.astype(q.dtype), gv.astype(q.dtype),
+                              causal=True, window=window, scale=scale,
+                              q_offset=start, kv_chunk=kv_chunk,
+                              kv_len=(start + length)[None])
+    return out, {"k": ck, "v": cv}
 
 
 # ---------------------------------------------------------------------------
@@ -197,12 +265,17 @@ def apply_attention(params: Dict, x: jax.Array, cfg: ModelConfig, *,
                     cache_index: Optional[jax.Array] = None,
                     memory: Optional[jax.Array] = None,
                     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    block_table: Optional[jax.Array] = None,
+                    seq_lens: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Optional[Dict]]:
     """One attention sublayer (projections + core + output).
 
     cache: {"k": (B,Smax,KV,D), "v": ...} for decode; cache_index (B,) write pos.
     memory: XL segment memory (B, M, d_model), no grad.
     cross_kv: precomputed encoder K/V for cross-attention.
+    block_table: (B, n_blocks) page table — switches the cache to the paged
+    pool layout {"k": (P, ps, KV, D), ...} (see ``paged_attend``);
+    ``seq_lens`` is its prefill-chunk valid-length vector.
     Returns (output, updated_cache).
     """
     a = cfg.attention
@@ -238,7 +311,12 @@ def apply_attention(params: Dict, x: jax.Array, cfg: ModelConfig, *,
         elif cfg.pos_encoding == "rope" and cross_kv is not None:
             q = apply_rope(q, positions, a.rope_theta)
 
-        if cache is not None and cross_kv is None:
+        if cache is not None and cross_kv is None and block_table is not None:
+            win = a.window if kind == "local" else 0
+            out, new_cache = paged_attend(
+                q, k, v, cache, block_table, cache_index, seq_lens,
+                scale=scale, window=win, kv_chunk=a.kv_chunk)
+        elif cache is not None and cross_kv is None:
             # decode: write new k/v at cache_index, attend over the filled prefix.
             idx = cache_index
             ck = jax.lax.dynamic_update_slice_in_dim(
@@ -274,4 +352,15 @@ def apply_attention(params: Dict, x: jax.Array, cfg: ModelConfig, *,
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
     a = cfg.attention
     shape = (batch, max_len, a.n_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    """One layer's paged KV pool: P pages of ps slots each, shared by all
+    requests via block tables. Page 0 is the reserved null/scratch page —
+    the allocator never hands it out, so unallocated block-table entries
+    (value 0) absorb writes from inactive lanes harmlessly."""
+    a = cfg.attention
+    shape = (n_pages, page_size, a.n_kv_heads, a.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

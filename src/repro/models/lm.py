@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from ..configs.base import BlockSpecEntry, ModelConfig, ShapeConfig
 from ..sharding.logical import SP_RULES, with_logical_constraint
 from .layers import apply_norm, dropout, init_embedding, init_norm
-from .stack import (apply_stack, cross_kv_cache, init_stack,
-                    init_stack_cache, plan_segments)
+from .stack import (apply_stack, cross_kv_cache, init_paged_stack_cache,
+                    init_stack, init_stack_cache, plan_segments)
 
 
 def _softcap(logits: jax.Array, cap: float) -> jax.Array:
@@ -200,6 +200,63 @@ class LM:
                 seg_cache[f"e{ei}"] = ec
             new_cache["segments"].append(seg_cache)
         return new_cache
+
+    # --------------------------------------------------------- paged serving
+    def _check_paged_support(self) -> None:
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "paged serving: encoder-decoder models unsupported")
+        if cfg.pos_encoding not in ("rope", "none"):
+            raise NotImplementedError(
+                f"paged serving: pos_encoding={cfg.pos_encoding!r} unsupported"
+                " (per-request offsets need position-free embeddings)")
+        if cfg.n_vision_tokens:
+            raise NotImplementedError("paged serving: vision prefix unsupported")
+
+    def init_paged_cache(self, n_pages: int, page_size: int) -> Dict:
+        """Paged KV pool shared by all requests; page 0 is the reserved
+        null/scratch page (never handed out by the allocator). The pool shape
+        is batch-independent: per-request placement lives in block tables."""
+        self._check_paged_support()
+        return init_paged_stack_cache(self.cfg, n_pages, page_size, self.dtype)
+
+    def prefill_paged(self, params, tokens: jax.Array, cache: Dict,
+                      block_table: jax.Array, start, length
+                      ) -> Tuple[jax.Array, Dict]:
+        """Prefill ONE request's chunk into the paged pool.
+
+        tokens (1, S) fixed-size padded chunk, block_table (1, n_blocks),
+        start = absolute offset of this chunk in the request, length = number
+        of valid tokens in the chunk (<= S; the padded tail is dropped on the
+        reserved OOB page). Returns (logits at the last valid token (1, V),
+        new_cache).
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        positions = start + jnp.arange(tokens.shape[1])
+        seq_lens = jnp.asarray(length, jnp.int32).reshape(1)
+        x, _, new_cache, _ = apply_stack(
+            params["stack"], x, cfg, positions=positions, cache=cache,
+            cache_index=start, block_table=block_table, seq_lens=seq_lens,
+            sp=False)
+        last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.maximum(jnp.asarray(length, jnp.int32) - 1, 0), 1, axis=1)
+        last = apply_norm(params["final_norm"], last, cfg)
+        return self._unembed(params, last)[:, 0], new_cache
+
+    def decode_step_paged(self, params, cache: Dict, token: jax.Array,
+                          positions: jax.Array, block_tables: jax.Array
+                          ) -> Tuple[jax.Array, Dict]:
+        """One batched paged decode step. token (B,), positions (B,) absolute
+        per-request positions, block_tables (B, n_blocks)."""
+        cfg = self.cfg
+        x = self._embed(params, token[:, None])
+        x, _, new_cache, _ = apply_stack(
+            params["stack"], x, cfg, positions=positions[:, None], cache=cache,
+            cache_index=positions, block_table=block_tables, sp=False)
+        x = apply_norm(params["final_norm"], x, cfg)
+        return self._unembed(params, x)[:, 0], new_cache
 
     def decode_step(self, params, cache: Dict, token: jax.Array,
                     pos) -> Tuple[jax.Array, Dict]:

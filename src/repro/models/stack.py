@@ -23,7 +23,9 @@ import jax.numpy as jnp
 
 from ..configs.base import BlockSpecEntry, ModelConfig
 from ..sharding.logical import SP_RULES, with_logical_constraint
-from .attention import apply_attention, init_attention, init_cache as init_attn_cache
+from .attention import (apply_attention, init_attention,
+                        init_cache as init_attn_cache,
+                        init_paged_cache as init_attn_paged_cache)
 from .ffn import apply_ffn, init_ffn
 from .layers import apply_norm, dropout, init_norm
 from .mamba2 import apply_ssm, init_ssm, init_ssm_cache
@@ -95,6 +97,8 @@ def apply_block(params: Dict, shared: Optional[Dict], x: jax.Array,
                 memory: Optional[jax.Array] = None,
                 enc_out: Optional[jax.Array] = None,
                 cross_cache: Optional[Dict] = None,
+                block_table: Optional[jax.Array] = None,
+                seq_lens: Optional[jax.Array] = None,
                 sp: bool = False) -> Tuple[jax.Array, Dict, Optional[Dict], Optional[jax.Array]]:
     """Pre-norm residual block. Returns (x, aux, new_cache, new_memory)."""
     aux = {"moe_reg": jnp.float32(0.0), "moe_dropped": jnp.float32(0.0)}
@@ -122,7 +126,8 @@ def apply_block(params: Dict, shared: Optional[Dict], x: jax.Array,
         y, c = apply_attention(mixer_params["attn"], h, cfg,
                                kind=entry.attn_kind, positions=positions,
                                cache=cache.get("self") if cache else None,
-                               cache_index=cache_index, memory=memory)
+                               cache_index=cache_index, memory=memory,
+                               block_table=block_table, seq_lens=seq_lens)
         if c is not None:
             new_cache["self"] = c
         x = constrain(x + dropout(r1, y, cfg.dropout, train))
@@ -225,6 +230,34 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
     return cache
 
 
+def init_paged_stack_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                           dtype, *, n_layers: Optional[int] = None) -> Dict:
+    """Paged KV pools mirroring the stack structure (page 0 reserved).
+
+    The pool shape is batch-independent: the per-request mapping lives in
+    the block table threaded through ``apply_stack`` instead.
+    """
+    segs = plan_segments(cfg, n_layers)
+
+    def entry_cache(entry):
+        if entry.mixer in ("attn", "shared_attn"):
+            return {"self": init_attn_paged_cache(cfg, n_pages, page_size,
+                                                  dtype)}
+        if entry.mixer == "ssm":
+            raise NotImplementedError("paged cache: ssm mixers unsupported")
+        return {}
+
+    cache = {"segments": []}
+    for seg in segs:
+        seg_cache = {}
+        for ei, entry in enumerate(seg.entries):
+            ec = entry_cache(entry)
+            seg_cache[f"e{ei}"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (seg.repeats,) + a.shape).copy(), ec)
+        cache["segments"].append(seg_cache)
+    return cache
+
+
 def apply_stack(params: Dict, x: jax.Array, cfg: ModelConfig, *,
                 rng: Optional[jax.Array] = None, train: bool = False,
                 positions: Optional[jax.Array] = None,
@@ -232,6 +265,8 @@ def apply_stack(params: Dict, x: jax.Array, cfg: ModelConfig, *,
                 mems: Optional[jax.Array] = None,
                 enc_out: Optional[jax.Array] = None,
                 cross_caches: Optional[Dict] = None,
+                block_table: Optional[jax.Array] = None,
+                seq_lens: Optional[jax.Array] = None,
                 remat: str = "none", sp: bool = False,
                 n_layers: Optional[int] = None):
     """Run all segments. Returns (x, aux, new_cache, new_mems)."""
@@ -270,6 +305,7 @@ def apply_stack(params: Dict, x: jax.Array, cfg: ModelConfig, *,
                     enc_out=enc_out,
                     cross_cache=(cxs.get(f"e{ei}", {}) or {}).get("cross")
                     if cxs is not None else None,
+                    block_table=block_table, seq_lens=seq_lens,
                     sp=sp)
                 x = xc
                 aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}

@@ -1,0 +1,39 @@
+"""Continuous-batching serving: paged KV cache, prefill/decode
+disaggregation, and cached decode-shaped CVMM plans.
+
+Block-table / KV-page contract (shared by models/attention.py:paged_attend,
+models/stack.py:init_paged_stack_cache and serving/kv_cache.py):
+
+* The per-layer cache is a POOL ``{"k": (P, page_size, KV, D), "v": ...}``
+  of P fixed-size pages shared by all requests. The pool shape is
+  batch-independent: join/evict never reshapes device state.
+* Page 0 is the reserved null/scratch page. The allocator never hands it
+  out; unallocated block-table entries point at it; dead/padding decode
+  lanes scatter into it; its contents are garbage that per-lane ``kv_len``
+  masking keeps out of every softmax.
+* A block table row ``(n_blocks,)`` maps a request's logical page j (token
+  positions ``[j*page_size, (j+1)*page_size)``) to a physical page id. ONE
+  table is shared by all layers — each layer's pool is indexed with the
+  same row.
+* Decode writes one token at ``(table[pos // page_size], pos % page_size)``
+  per lane; prefill chunks write one request (B == 1) at a time, with the
+  padded chunk tail targeting the out-of-bounds page id P so those writes
+  DROP.
+
+Decode plan-cache keying (serving/decode_plan.py):
+
+* skeleton cache: ``(n_tokens, k, n_experts, d_model, expert_size, dtype)``
+  -> routing-free ``DecodePlan`` (static tile layout + dedup token gather).
+  Keys are trace-time shape constants, so at steady state the jit cache and
+  this cache miss together or not at all: ``rebuilds`` stays frozen.
+* assembled cache: skeleton key + raw ``(idx, gates)`` bytes -> full
+  ``CvmmPlan``; a routing change is an invalidation by construction. Only
+  the bench/tests materialize these — the hot path runs off the skeleton.
+"""
+from .decode_plan import DecodePlanCache, make_provider
+from .engine import Engine, Request
+from .kv_cache import PagedKVCache
+from .scheduler import FifoScheduler, capture_sizes, pick_capture
+
+__all__ = ["DecodePlanCache", "Engine", "FifoScheduler", "PagedKVCache",
+           "Request", "capture_sizes", "make_provider", "pick_capture"]

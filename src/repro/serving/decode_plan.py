@@ -1,0 +1,124 @@
+"""Cached decode-shaped CVMM plans and the expert-MLP decode provider.
+
+Two cache levels, keyed as documented in serving/__init__.py:
+
+* skeleton cache — routing-free ``DecodePlan`` per decode shape class,
+  keyed ``(n_tokens, k, n_experts, d_model, expert_size, dtype)``. A miss
+  runs the autotuner's ``decode_gemm`` family and builds the static layout
+  (``kernels/ops.py:make_decode_plan``); every later step with the same
+  shape reuses it, so at steady state ``rebuilds`` stays frozen while
+  ``hits`` climbs. ``None`` results (no fitting tile) are cached too, so a
+  shape that can't use the decode path is probed exactly once.
+
+* assembled cache — full ``CvmmPlan`` per (skeleton, routing) pair, keyed
+  by the skeleton key plus the raw bytes of (idx, gates). The hot path
+  never touches it (``moe_mlp_decode`` runs straight off the skeleton);
+  the serve bench and tests use it to show routing-change invalidation
+  semantics against the plan-invariant oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+
+from ..sharding.context import current_mesh
+
+
+def _skeleton_key(n_tokens: int, k: int, n_experts: int, d_model: int,
+                  expert_size: int, dtype) -> Tuple:
+    return (n_tokens, k, n_experts, d_model, expert_size,
+            str(jax.numpy.dtype(dtype)))
+
+
+class DecodePlanCache:
+    """Skeleton + assembled plan caches with spy counters.
+
+    ``rebuilds``/``hits`` count skeleton construction vs reuse;
+    ``assembles``/``assembled_hits`` do the same for routing-materialized
+    plans. The CI serve gate pins ``rebuilds`` deltas to zero over the
+    steady-state window.
+    """
+
+    def __init__(self):
+        self._skeletons: Dict[Tuple, object] = {}
+        self._assembled: Dict[Tuple, object] = {}
+        self.rebuilds = 0
+        self.hits = 0
+        self.assembles = 0
+        self.assembled_hits = 0
+
+    def skeleton(self, n_tokens: int, k: int, n_experts: int, d_model: int,
+                 expert_size: int, dtype):
+        """Cached ``DecodePlan`` for one shape class (None if no tile fits)."""
+        from ..kernels import ops as kops
+
+        key = _skeleton_key(n_tokens, k, n_experts, d_model, expert_size,
+                            dtype)
+        if key in self._skeletons:
+            self.hits += 1
+            return self._skeletons[key]
+        self.rebuilds += 1
+        # The provider runs inside jit traces; build the skeleton's constant
+        # arrays eagerly so the cached plan holds real arrays, not tracers of
+        # whichever trace happened to miss first.
+        with jax.ensure_compile_time_eval():
+            plan = kops.make_decode_plan(n_tokens, k, n_experts, d_model,
+                                         expert_size, dtype=dtype)
+        self._skeletons[key] = plan
+        return plan
+
+    def assembled(self, plan, idx, gates):
+        """Cached full ``CvmmPlan`` for one concrete routing (host-side:
+        idx/gates must be concrete arrays, not tracers)."""
+        from ..kernels import ops as kops
+
+        idx_np = np.asarray(idx)
+        key = (plan.n_tokens, plan.k, plan.n_experts, plan.cap,
+               idx_np.tobytes(), np.asarray(gates).tobytes())
+        if key in self._assembled:
+            self.assembled_hits += 1
+            return self._assembled[key]
+        self.assembles += 1
+        full = kops.assemble_decode_plan(plan, idx, gates)
+        self._assembled[key] = full
+        return full
+
+    def counters(self) -> Dict[str, int]:
+        return {"rebuilds": self.rebuilds, "hits": self.hits,
+                "assembles": self.assembles,
+                "assembled_hits": self.assembled_hits}
+
+
+def make_provider(cache: DecodePlanCache, *, max_tokens: int = 64):
+    """Build an ``expert_mlp`` decode provider backed by ``cache``.
+
+    The provider serves the sort dispatch only for decode-sized calls
+    (``n_tokens <= max_tokens``) with no active mesh; anything else returns
+    None and falls through to the regular per-call plan path. Install with
+    ``core.dispatch.set_decode_provider``; remove with
+    ``set_decode_provider(None)``.
+    """
+
+    def provider(params, xf, cfg, info, e):
+        n = int(xf.shape[0])
+        if n > max_tokens or current_mesh() is not None:
+            return None
+        from ..core.dispatch import resolve_impl
+        from ..kernels import ops as kops
+
+        k = int(info.idx.shape[-1])
+        plan = cache.skeleton(n, k, e, int(xf.shape[1]),
+                              int(cfg.expert_size), xf.dtype)
+        if plan is None:
+            return None
+        interpret = (True if resolve_impl(cfg).endswith("_interpret")
+                     else None)
+        w1g = params.get("we1g") if cfg.glu_experts else None
+        return kops.moe_mlp_decode(
+            xf, info.idx, info.gates, plan,
+            params["we1"], params["we2"], w1g,
+            activation=cfg.activation, interpret=interpret)
+
+    return provider

@@ -1,0 +1,291 @@
+"""Continuous-batching decode engine over the paged KV cache.
+
+Requests join and leave the decode batch mid-flight (continuous batching);
+prefill and decode are disaggregated — each scheduling iteration runs at
+most a bounded number of prefill chunks before the decode batch steps
+again, so a long prompt can never stall in-flight generation for its full
+length.
+
+The decode loop is free of per-step host syncs: a jitted ``lax.scan``
+burst advances every lane ``burst_steps`` tokens with EOS/length
+termination decided on device (dead lanes emit -1 and freeze), and the
+host performs ONE readback per burst to harvest tokens and retire
+finished lanes. Burst batch shapes are rounded up to a small capture-size
+menu (powers of two) so join/evict churn never retraces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import dispatch
+from .decode_plan import DecodePlanCache, make_provider
+from .kv_cache import PagedKVCache
+from .scheduler import FifoScheduler, capture_sizes, pick_capture
+
+
+@dataclass
+class Request:
+    rid: Any
+    prompt: Sequence[int]
+    max_new: int
+    eos: int = -1          # token id that stops generation; -1 = never
+
+
+@dataclass
+class _Lane:
+    """Host-authoritative state of one in-flight decode lane."""
+    rid: Any
+    table: np.ndarray      # (n_blocks,) int32 physical page ids
+    tok: int               # last emitted token (next step's input)
+    pos: int               # absolute write position of `tok`
+    rem: int               # tokens still allowed
+    eos: int
+    out: List[int] = field(default_factory=list)
+
+
+@dataclass
+class _Prefill:
+    """A request mid-prefill (chunks consumed across iterations)."""
+    req: Request
+    table: np.ndarray
+    start: int = 0
+    logits: Optional[jax.Array] = None   # last chunk's final-token logits
+
+
+class Engine:
+    """Greedy-decoding continuous-batching engine.
+
+    Usage::
+
+        eng = Engine(lm, params, max_batch=8, max_len=256)
+        try:
+            outputs = eng.run([Request("a", [3, 5, 7], max_new=16)])
+        finally:
+            eng.close()
+
+    ``outputs[rid]`` is the list of generated token ids (prompt excluded).
+    """
+
+    def __init__(self, lm, params, *, max_batch: int = 8, max_len: int = 256,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 burst_steps: int = 8, prefill_chunk: int = 16,
+                 prefill_chunks_per_step: int = 2,
+                 use_decode_plans: bool = True,
+                 decode_plan_max_tokens: Optional[int] = None):
+        self.lm = lm
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.page_size = page_size
+        self.n_blocks = -(-max_len // page_size)
+        if n_pages is None:
+            n_pages = 1 + max_batch * self.n_blocks
+        self.burst_steps = burst_steps
+        self.prefill_chunk = prefill_chunk
+        self.prefill_chunks_per_step = prefill_chunks_per_step
+        self.capture_sizes = capture_sizes(max_batch)
+
+        self.cache = lm.init_paged_cache(n_pages, page_size)
+        self.kv = PagedKVCache(n_pages, page_size)
+        self.sched = FifoScheduler()
+        self.lanes: List[_Lane] = []
+        self.outputs: Dict[Any, List[int]] = {}
+        self._partial: Optional[_Prefill] = None
+        self.stats = {"prefill_chunks": 0, "decode_steps": 0, "bursts": 0,
+                      "completed": 0, "evicted": 0}
+
+        self._prefill_fn = jax.jit(self.lm.prefill_paged, donate_argnums=(2,))
+        self._burst_fns: Dict[Tuple[int, int], Any] = {}
+
+        self.plan_cache: Optional[DecodePlanCache] = None
+        if use_decode_plans:
+            self.plan_cache = DecodePlanCache()
+            cap = (decode_plan_max_tokens if decode_plan_max_tokens is not None
+                   else max(max_batch, prefill_chunk))
+            dispatch.set_decode_provider(
+                make_provider(self.plan_cache, max_tokens=cap))
+
+    # --------------------------------------------------------------- teardown
+    def close(self) -> None:
+        if self.plan_cache is not None:
+            dispatch.set_decode_provider(None)
+            self.plan_cache = None
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        if not len(req.prompt):
+            raise ValueError("empty prompt")
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid!r}: prompt+max_new "
+                f"{len(req.prompt) + req.max_new} exceeds max_len "
+                f"{self.max_len}")
+        self.sched.submit(req)
+
+    def cancel(self, rid) -> bool:
+        """Evict an in-flight request; its partial output is kept."""
+        for i, lane in enumerate(self.lanes):
+            if lane.rid == rid:
+                self.lanes.pop(i)
+                self.kv.free(rid)
+                self.outputs[rid] = lane.out
+                self.stats["evicted"] += 1
+                return True
+        return False
+
+    def has_work(self) -> bool:
+        return bool(self.lanes or self.sched or self._partial is not None)
+
+    # ---------------------------------------------------------------- prefill
+    def _prefill_one_chunk(self) -> None:
+        p = self._partial
+        prompt = np.asarray(p.req.prompt, np.int32)
+        ln = min(self.prefill_chunk, len(prompt) - p.start)
+        chunk = np.zeros((1, self.prefill_chunk), np.int32)
+        chunk[0, :ln] = prompt[p.start:p.start + ln]
+        p.logits, self.cache = self._prefill_fn(
+            self.params, jnp.asarray(chunk), self.cache,
+            jnp.asarray(p.table[None]), jnp.int32(p.start), jnp.int32(ln))
+        p.start += ln
+        self.stats["prefill_chunks"] += 1
+
+    def _finish_prefill(self) -> None:
+        p, self._partial = self._partial, None
+        req = p.req
+        t0 = int(np.argmax(jax.device_get(p.logits)[0]))
+        if t0 == req.eos or req.max_new <= 1:
+            # EOS at step 0 (or single-token budget): completes without
+            # ever joining the decode batch.
+            self.outputs[req.rid] = [t0]
+            self.kv.free(req.rid)
+            self.stats["completed"] += 1
+            return
+        self.lanes.append(_Lane(rid=req.rid, table=p.table, tok=t0,
+                                pos=len(req.prompt), rem=req.max_new - 1,
+                                eos=req.eos, out=[t0]))
+
+    def _admit(self) -> bool:
+        """Start prefilling the next queued request if a lane and pages are
+        available. Returns False on backpressure or an empty queue."""
+        if self._partial is not None:
+            return True
+        if not self.sched or len(self.lanes) >= self.max_batch:
+            return False
+        req = self.sched.peek()
+        total = len(req.prompt) + req.max_new
+        if not self.kv.can_alloc(total):
+            return False          # backpressure: wait for lanes to retire
+        self.sched.pop()
+        self.kv.alloc(req.rid, total)
+        self._partial = _Prefill(req=req,
+                                 table=self.kv.block_table(req.rid,
+                                                           self.n_blocks))
+        return True
+
+    # ----------------------------------------------------------------- decode
+    def _make_burst(self, cap: int, steps: int):
+        lm = self.lm
+
+        def burst(params, cache, tok, pos, rem, live, eos, tables):
+            def step(carry, _):
+                cache, tok, pos, rem, live = carry
+                logits, cache = lm.decode_step_paged(params, cache, tok, pos,
+                                                     tables)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                emit = jnp.where(live, nxt, -1)
+                rem2 = rem - live.astype(jnp.int32)
+                done_now = live & ((nxt == eos) | (rem2 <= 0))
+                live2 = live & ~done_now
+                pos2 = pos + live.astype(jnp.int32)
+                tok2 = jnp.where(live2, nxt, tok)
+                return (cache, tok2, pos2, rem2, live2), emit
+
+            carry, emitted = jax.lax.scan(step, (cache, tok, pos, rem, live),
+                                          None, length=steps)
+            cache, tok, pos, rem, live = carry
+            return cache, live, emitted
+
+        return jax.jit(burst, donate_argnums=(1,))
+
+    def decode_burst(self, steps: Optional[int] = None) -> int:
+        """Advance every live lane up to ``steps`` tokens; retire finished
+        lanes. Returns the number of tokens harvested."""
+        if not self.lanes:
+            return 0
+        steps = self.burst_steps if steps is None else steps
+        n = len(self.lanes)
+        cap = pick_capture(n, self.capture_sizes)
+
+        tok = np.zeros((cap,), np.int32)
+        pos = np.zeros((cap,), np.int32)
+        rem = np.zeros((cap,), np.int32)
+        live = np.zeros((cap,), bool)
+        eos = np.full((cap,), -1, np.int32)
+        tables = np.zeros((cap, self.n_blocks), np.int32)
+        for i, lane in enumerate(self.lanes):
+            tok[i], pos[i], rem[i] = lane.tok, lane.pos, lane.rem
+            live[i], eos[i], tables[i] = True, lane.eos, lane.table
+
+        fn = self._burst_fns.get((cap, steps))
+        if fn is None:
+            fn = self._burst_fns[(cap, steps)] = self._make_burst(cap, steps)
+        self.cache, live_f, emitted = fn(
+            self.params, self.cache, jnp.asarray(tok), jnp.asarray(pos),
+            jnp.asarray(rem), jnp.asarray(live), jnp.asarray(eos),
+            jnp.asarray(tables))
+        # the ONE host readback for these `steps` decode steps
+        live_f, emitted = jax.device_get((live_f, emitted))
+
+        harvested = 0
+        survivors: List[_Lane] = []
+        for i, lane in enumerate(self.lanes):
+            toks = emitted[:, i]
+            toks = toks[toks >= 0]
+            lane.out.extend(int(t) for t in toks)
+            harvested += len(toks)
+            if live_f[i]:
+                lane.tok = int(toks[-1])
+                lane.pos += len(toks)
+                lane.rem -= len(toks)
+                survivors.append(lane)
+            else:
+                self.outputs[lane.rid] = lane.out
+                self.kv.free(lane.rid)
+                self.stats["completed"] += 1
+        self.lanes = survivors
+        self.stats["decode_steps"] += steps
+        self.stats["bursts"] += 1
+        return harvested
+
+    # ------------------------------------------------------------------ drive
+    def step(self) -> None:
+        """One scheduling iteration: a bounded number of prefill chunks
+        (disaggregation — decode never waits for a whole prompt), then one
+        decode burst."""
+        budget = self.prefill_chunks_per_step
+        while budget > 0 and self._admit():
+            self._prefill_one_chunk()
+            budget -= 1
+            if self._partial.start >= len(self._partial.req.prompt):
+                self._finish_prefill()
+        if self.lanes:
+            self.decode_burst()
+
+    def run(self, requests: Sequence[Request]) -> Dict[Any, List[int]]:
+        """Submit ``requests``, drive to completion, return rid -> tokens."""
+        for r in requests:
+            self.submit(r)
+        while self.has_work():
+            self.step()
+        return {r.rid: self.outputs[r.rid] for r in requests}
